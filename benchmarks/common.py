@@ -1,0 +1,18 @@
+"""Shared benchmark helpers: CSV emission + default scenario constants."""
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6   # µs

@@ -1,0 +1,51 @@
+"""Paper Fig. 12: median normalized latency (s/token) vs request rate —
+colocated FasterTransformer-style baseline vs DéjàVu disaggregation, for
+OPT-66B (8 machines) and BLOOM-176B (12 machines), LMSys-like output lengths,
+Poisson arrivals, prompt 1000.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.planner import MachineSpec, plan
+from repro.core.schedule import Job
+from repro.core.simulator import (lmsys_like_tokens, poisson_arrivals,
+                                  simulate_baseline, simulate_dejavu)
+
+from benchmarks.common import emit
+
+
+def _sweep(cfg, d, rates, n_jobs=48, mean_tok=150):
+    mach = MachineSpec()
+    wl = cm.WorkloadSpec(1000, mean_tok, 16)
+    toks = lmsys_like_tokens(n_jobs, seed=0, mean_target=mean_tok)
+    p = plan(cfg, wl, d, mach)
+    max_sustain = {"baseline": 0.0, "dejavu": 0.0}
+    for rate in rates:
+        arr = poisson_arrivals(n_jobs, rate, seed=1)
+        jobs = [Job(i, float(arr[i]), int(toks[i])) for i in range(n_jobs)]
+        rb = simulate_baseline(cfg, wl, d, jobs, mach)
+        rdv = simulate_dejavu(cfg, wl, d, jobs, mach, the_plan=p)
+        emit(f"fig12/{cfg.name}/D{d}/rate{rate:g}/baseline_norm_lat",
+             rb.normalized_latency * 1e6, f"makespan={rb.makespan:.0f}s")
+        emit(f"fig12/{cfg.name}/D{d}/rate{rate:g}/dejavu_{p.d_prompt}-{p.d_token}_norm_lat",
+             rdv.normalized_latency * 1e6, f"makespan={rdv.makespan:.0f}s")
+        # "sustained" = normalized latency below 2x the unloaded value
+        if rb.normalized_latency < 2 * rdv.normalized_latency or True:
+            pass
+        for k, r in (("baseline", rb), ("dejavu", rdv)):
+            if np.isfinite(r.normalized_latency):
+                max_sustain[k] = max(max_sustain[k], rate) if \
+                    r.normalized_latency < 0.35 else max_sustain[k]
+    gain = (max_sustain["dejavu"] / max_sustain["baseline"]
+            if max_sustain["baseline"] else float("nan"))
+    emit(f"fig12/{cfg.name}/sustained_rate_gain", gain * 1e6,
+         f"dejavu={max_sustain['dejavu']:g}rps baseline={max_sustain['baseline']:g}rps "
+         f"(paper: 1.88x OPT-66B, 2x BLOOM-176B)")
+
+
+def run() -> None:
+    _sweep(PAPER_ARCHS["opt-66b"], 8, rates=(0.2, 0.4, 0.6, 0.8, 1.0, 1.2))
+    _sweep(PAPER_ARCHS["bloom-176b"], 12, rates=(0.1, 0.2, 0.3, 0.4, 0.6))

@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks (wall time, CPU interpret mode).
+
+Interpret-mode timings validate the harness, not TPU performance — the
+TPU-relevant numbers are the §Roofline terms from the compiled dry-run.
+Includes the kv_pack buffered-copy dispatch-count comparison that is
+hardware-independent: one kernel launch vs 2·L slice copies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.kv_pack import kv_pack
+from repro.kernels import ref
+
+from benchmarks.common import emit, timeit
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    # flash attention vs reference
+    b, s, hq, hkv, d = 1, 128, 4, 2, 32
+    q = jax.random.normal(key, (b, s, hq, d))
+    k = jax.random.normal(key, (b, s, hkv, d))
+    v = jax.random.normal(key, (b, s, hkv, d))
+    f1 = jax.jit(lambda q, k, v: flash_attention(q, k, v, block_q=64, block_k=64))
+    f2 = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    emit("kernels/flash_attention_interp_us", timeit(f1, q, k, v), "interpret-mode")
+    emit("kernels/flash_attention_ref_us", timeit(f2, q, k, v), "jnp-oracle")
+
+    # decode attention
+    q1 = jax.random.normal(key, (2, hq, d))
+    kc = jax.random.normal(key, (2, 512, hkv, d))
+    vc = jax.random.normal(key, (2, 512, hkv, d))
+    valid = jnp.ones((512,), bool)
+    g1 = jax.jit(lambda q, k, v: decode_attention(q, k, v, valid, block_k=256))
+    g2 = jax.jit(lambda q, k, v: ref.decode_attention_ref(q, k, v, valid))
+    emit("kernels/decode_attention_interp_us", timeit(g1, q1, kc, vc), "")
+    emit("kernels/decode_attention_ref_us", timeit(g2, q1, kc, vc), "")
+
+    # kv_pack: ONE launch covers what 2·L non-contiguous copies would
+    L, B, S, H, D = 32, 4, 256, 8, 64
+    cache = jax.random.normal(key, (L, B, S, H, D), jnp.bfloat16)
+    p1 = jax.jit(lambda c: kv_pack(c, 128, width=8))
+    emit("kernels/kv_pack_interp_us", timeit(p1, cache),
+         f"1_launch_replaces_{2*L}_slice_copies")

@@ -1,0 +1,40 @@
+"""Paper Fig. 2 + Appendix A (Figs. 16–19): bimodal prompt vs token latency.
+
+Prompt processing is compute-bound and scales with batch·prompt_len; per-token
+generation is bandwidth-bound and nearly constant — the ratio (up to ~106× in
+the paper) is the pipeline-bubble driver that motivates disaggregation.
+Derived from the calibrated v5e cost model on the paper's models + assigned
+archs.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCHS
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.planner import MachineSpec
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    mach = MachineSpec()
+    rows = []
+    for name in ("opt-66b", "bloom-176b", "gpt2-1.5b"):
+        cfg = PAPER_ARCHS[name]
+        for b in (1, 8, 32):
+            for plen in (250, 1000, 4000):
+                wl = cm.WorkloadSpec(plen, 1, b)
+                y = cm.stage_prompt_time(cfg, wl, cfg.num_layers, 8 * mach.chips)
+                t = cm.stage_token_time(cfg, wl, cfg.num_layers, 8 * mach.chips,
+                                        plen + 500)
+                emit(f"fig2/{name}/b{b}/p{plen}/prompt_ms", y * 1e9 / 1e3,
+                     f"ratio={y/t:.1f}x")
+                emit(f"fig2/{name}/b{b}/p{plen}/token_ms", t * 1e9 / 1e3, "")
+                rows.append(y / t)
+    for name in sorted(ARCHS):
+        cfg = ARCHS[name]
+        wl = cm.WorkloadSpec(1000, 1, 8)
+        y = cm.stage_prompt_time(cfg, wl, cfg.num_layers, 8 * mach.chips)
+        t = cm.stage_token_time(cfg, wl, cfg.num_layers, 8 * mach.chips, 1500)
+        emit(f"fig2/{name}/b8/p1000/ratio", y / t * 1e6, f"{y/t:.1f}x")
+    emit("fig2/max_ratio", max(rows) * 1e6, f"paper_reports_up_to_106x")

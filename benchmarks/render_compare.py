@@ -1,0 +1,45 @@
+"""Render the baseline → optimized comparison table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def key(r):
+    return (r["arch"], r["shape"], r["mesh"])
+
+
+def main(base_path="results/dryrun_baseline.json",
+         opt_path="results/dryrun_opt.json"):
+    base = {key(r): r for r in json.load(open(base_path))}
+    opt = {key(r): r for r in json.load(open(opt_path))}
+    rows = ["| arch | shape | mesh | dominant (base → opt) | base dom (ms) | "
+            "opt dom (ms) | speedup | useful FLOPs (base → opt) | HBM GB (base → opt) |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    speedups = []
+    for k in sorted(base):
+        b, o = base[k], opt.get(k)
+        if b["status"] != "ok" or o is None or o["status"] != "ok":
+            continue
+        rb, ro = b["roofline"], o["roofline"]
+        db = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+        do = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        sp = db / do if do else float("nan")
+        speedups.append((sp, k))
+        rows.append(
+            f"| {k[0]} | {k[1]} | {k[2]} | {rb['dominant']} → {ro['dominant']} "
+            f"| {db*1e3:.2f} | {do*1e3:.2f} | **{sp:.2f}×** "
+            f"| {rb['useful_flops_ratio']*100:.1f}% → {ro['useful_flops_ratio']*100:.1f}% "
+            f"| {b['per_device']['hbm_total_bytes']/1e9:.1f} → "
+            f"{o['per_device']['hbm_total_bytes']/1e9:.1f} |")
+    print("\n".join(rows))
+    if speedups:
+        import statistics
+        sps = [s for s, _ in speedups]
+        print(f"\ngeomean speedup on the dominant roofline term: "
+              f"**{statistics.geometric_mean(sps):.2f}×** over {len(sps)} cells "
+              f"(max {max(sps):.1f}×, min {min(sps):.2f}×)")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

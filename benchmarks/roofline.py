@@ -1,0 +1,54 @@
+"""Roofline table from the compiled dry-run artifacts (assignment §Roofline).
+
+Reads results/dryrun_*.json (produced by `python -m repro.launch.dryrun`) and
+prints per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-device HBM residency.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT_PATH = "results/dryrun_baseline.json"
+
+
+def load(path: str = DEFAULT_PATH):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(path: str = DEFAULT_PATH) -> None:
+    rows = load(path)
+    if not rows:
+        emit("roofline/missing", 0.0, f"run `python -m repro.launch.dryrun` first")
+        return
+    n_ok = n_skip = n_err = 0
+    for r in rows:
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            emit(tag, 0.0, "skipped_subquadratic_rule")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            emit(tag, 0.0, f"ERROR:{r.get('error','')[:60]}")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        emit(tag, dom_s * 1e6,
+             f"dom={rf['dominant']} compute={rf['compute_s']*1e3:.2f}ms "
+             f"mem={rf['memory_s']*1e3:.2f}ms coll={rf['collective_s']*1e3:.2f}ms "
+             f"useful={rf['useful_flops_ratio']*100:.1f}% "
+             f"hbm/dev={r['per_device']['hbm_total_bytes']/1e9:.1f}GB "
+             f"fits={r['fits_hbm']}")
+    emit("roofline/summary", float(n_ok) * 1e6,
+         f"ok={n_ok} skipped={n_skip} errors={n_err}")
+
+
+if __name__ == "__main__":
+    run()

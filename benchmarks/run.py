@@ -1,0 +1,43 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+``python -m benchmarks.run [--only fig12]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig2_prompt_vs_token", "benchmarks.prompt_vs_token"),
+    ("fig11_streaming_breakdown", "benchmarks.streaming_breakdown"),
+    ("fig12_e2e_disagg", "benchmarks.e2e_disagg"),
+    ("fig13_swapping", "benchmarks.swapping"),
+    ("fig14_15_failures", "benchmarks.failures"),
+    ("appB_planner_study", "benchmarks.planner_study"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter over benchmark names")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, modpath in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        mod = __import__(modpath, fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going, report the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
+        print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

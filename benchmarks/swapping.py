@@ -1,0 +1,89 @@
+"""Paper Fig. 13 + Appendix E (Figs. 28–31): microbatch swapping benefit.
+
+Throughput with the largest feasible all-resident batch B vs swapping with
+2·B (two device slots + host pool).  Swapping wins while the per-step swap
+transfer stays below the token step time (App. E inequality); larger
+sequences/batches flip the inequality — both regimes are reported.
+"""
+from __future__ import annotations
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.planner import MachineSpec
+from repro.core.schedule import Job
+from repro.core.simulator import lmsys_like_tokens, simulate_baseline
+
+from benchmarks.common import emit
+
+
+def _largest_feasible_mb(cfg, d, mach, prompt, new):
+    for b in (64, 48, 32, 24, 16, 12, 8, 6, 4, 2, 1):
+        wl = cm.WorkloadSpec(prompt, new, b)
+        c0 = cm.layer_prompt_kv_bytes(cfg, wl)
+        k0 = cm.layer_token_kv_bytes(cfg, wl)
+        w0 = cm.layer_param_bytes(cfg)
+        lps = -(-cfg.num_layers // d)
+        # all-resident: stage holds lps layers' weights + d microbatches' KV
+        need = lps * w0 + cfg.num_layers * (c0 + k0)
+        if need <= mach.mem_bytes:
+            return b
+    return 0
+
+
+def _throughput(cfg, d, mach, b, prompt, new, swapping):
+    wl = cm.WorkloadSpec(prompt, new, b)
+    toks = lmsys_like_tokens(24, seed=0, mean_target=new)
+    jobs = [Job(i, 0.0, int(t)) for i, t in enumerate(toks)]
+    r = simulate_baseline(cfg, wl, d, jobs, mach, swapping=swapping)
+    total_tokens = b * sum(j.n_tokens for j in jobs)
+    return total_tokens / r.makespan
+
+
+def run() -> None:
+    # --- paper-regime reproduction (A100/V100-era efficiency) ---------------
+    # The paper's 1.8x swapping gain relies on slow per-token steps (their
+    # Fig. 2: 50–100 ms/token on FasterTransformer-era GPUs), which leave a
+    # wide (D−1)·t prefetch window.  We reproduce the mechanism with the
+    # paper's effective-bandwidth regime, then evaluate the v5e regime where
+    # App. E's inequality flips (hardware-adaptation finding, DESIGN.md §8).
+    from repro.core.dejavulib.transport import HardwareModel
+    paper_hw = HardwareModel(peak_flops=312e12, hbm_bw=2.0e12,
+                             host_link_bw=25e9)
+    paper_mach = MachineSpec(chips=2, mem_bytes=160e9)   # 2×A100-80GB VM
+    # The mechanism wins where App. E's inequality holds: short contexts
+    # (paper Fig. 28 shows the crossover between seq 512 and 1024) and
+    # FT/V100-era effective bandwidth (per-token ~100 ms, paper Fig. 2).
+    for name, d, plen, gen in (("opt-66b", 4, 128, 128),
+                               ("bloom-176b", 6, 128, 128),
+                               ("opt-66b", 4, 1000, 220)):   # beyond-crossover
+        cfg = PAPER_ARCHS[name]
+        for b in (8,):
+            wl = cm.WorkloadSpec(plen, gen, b)
+            toks = lmsys_like_tokens(24, seed=0, mean_target=gen)
+            jobs = [Job(i, 0.0, int(t)) for i, t in enumerate(toks)]
+            r0 = simulate_baseline(cfg, wl, d, jobs, paper_mach, paper_hw,
+                                   beff=0.05, swapping=False)
+            wl2 = cm.WorkloadSpec(plen, gen, 2 * b)
+            r2 = simulate_baseline(cfg, wl2, d, jobs, paper_mach, paper_hw,
+                                   beff=0.05, swapping=True)
+            tp0 = b * sum(j.n_tokens for j in jobs) / r0.makespan
+            tp2 = 2 * b * sum(j.n_tokens for j in jobs) / r2.makespan
+            emit(f"fig13/paperhw/{name}/D{d}/ctx{plen+gen}/b{b}_vs_swap2b",
+                 tp2 / tp0 * 1e6,
+                 f"gain={tp2/tp0:.2f}x (paper: up to 1.8x at short ctx, "
+                 f"<1x beyond the Fig.-28 crossover)")
+
+    # --- v5e regime: where does App. E's inequality hold? -------------------
+    mach = MachineSpec()
+    cfg = PAPER_ARCHS["opt-66b"]
+    for seq in (256, 512, 1024, 2048, 4096):
+        wl = cm.WorkloadSpec(seq // 2, seq // 2, 16)
+        lps = -(-cfg.num_layers // 4)
+        t = cm.stage_token_time(cfg, wl, lps, mach.chips, seq)
+        tr = cm.swap_transfer_time(cfg, wl, lps, seq)
+        window = 3 * t     # (D−1)·t prefetch window, D=4
+        emit(f"appE/opt-66b/v5e/seq{seq}/swap_vs_window", tr / window * 1e6,
+             f"transfer={tr*1e3:.2f}ms window={(window)*1e3:.2f}ms "
+             f"{'hidden' if tr <= window else 'EXPOSED'} "
+             f"(v5e hostlink/HBM ratio makes swapping pay only below "
+             f"{int(window * 16e9 / (cfg.kv_bytes_per_token() * 16 / 4))} ctx tokens)")

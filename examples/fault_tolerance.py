@@ -1,0 +1,52 @@
+"""Fault tolerance (paper §4.2.3): token-level ring replication + 4-step
+recovery.  A stage is killed mid-generation; the controller detects the
+missing heartbeat, restores the lost KV from the ring successor's replica,
+and generation resumes from the last replicated token — regenerating tokens
+bit-identical to a failure-free run.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("gpt2-1.5b").reduced(), num_layers=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 10)).astype(np.int32)
+
+    def reqs():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new=8)
+                for i in range(4)]
+
+    ref = ServingEngine(cfg, model, params, 4, microbatch=2).run(reqs())
+
+    eng = ServingEngine(cfg, model, params, 4, microbatch=2, replication=True)
+    rep = eng.run(reqs(), fail_at={13: 2})     # kill worker 2 at step 13
+
+    print(f"failures={rep.failures} recoveries={rep.recoveries} "
+          f"steps_redone={rep.steps_redone}")
+    print("tokens identical to failure-free run:", rep.tokens == ref.tokens)
+    for ev in eng.cluster.controller.events:
+        print("controller event:", {k: v for k, v in ev.items() if k != "t"})
+
+    # straggler mitigation reuses the same machinery (beyond-paper)
+    eng2 = ServingEngine(cfg, model, params, 4, microbatch=2, replication=True)
+    rep2 = eng2.run(reqs(), migrate_at={9: 1})
+    print("straggler migration keeps tokens identical:",
+          rep2.tokens == ref.tokens)
+
+
+if __name__ == "__main__":
+    main()

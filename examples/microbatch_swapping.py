@@ -1,0 +1,55 @@
+"""Microbatch swapping (paper §4.2.2): all in-flight microbatches' KV caches
+live in host memory; only the active slots are device-resident.  The swap
+path uses the Pallas kv_pack kernel (buffered copies) so each writeback is
+ONE contiguous transfer instead of per-layer slices.
+
+    PYTHONPATH=src python examples/microbatch_swapping.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import costmodel as cm
+from repro.core.planner import MachineSpec
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    # memory accounting at paper scale: why swapping unlocks 2x batches
+    full = get_arch("opt-66b")
+    mach = MachineSpec()
+    wl = cm.WorkloadSpec(1000, 220, 32)
+    kv_all = full.decode_state_bytes(1220) * wl.microbatch      # one microbatch
+    d = 4
+    resident_all = d * kv_all / d                                # all-resident/stage
+    resident_swap = 2 * kv_all / d                               # 2 slots/stage
+    print(f"OPT-66B b=32: per-stage KV all-resident={resident_all/1e9:.1f}GB, "
+          f"with swapping={resident_swap/1e9:.1f}GB "
+          f"(machine budget {mach.mem_bytes/1e9:.0f}GB)")
+
+    # real run: swapping produces identical tokens; hostlink bytes move
+    cfg = dataclasses.replace(get_arch("gpt2-1.5b").reduced(), num_layers=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 10)).astype(np.int32)
+
+    def reqs():
+        return [Request(rid=i, prompt=prompts[i].copy(), max_new=6)
+                for i in range(4)]
+
+    base = ServingEngine(cfg, model, params, 4, microbatch=2).run(reqs())
+    eng = ServingEngine(cfg, model, params, 4, microbatch=2, swapping=True)
+    rep = eng.run(reqs())
+    print("tokens identical with swapping:", rep.tokens == base.tokens)
+    print("host-link (PCIe-role) bytes:", eng.transfer_summary()["hostlink"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Prompt/token disaggregation (paper §4.2.1): the planner splits D machines
+into a prompt pipeline and a token pipeline; the prompt KV cache streams
+P→T through DéjàVuLib, and generated tokens match the colocated baseline
+bit-for-bit.
+
+    PYTHONPATH=src python examples/serve_disaggregated.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import costmodel as cm
+from repro.core.planner import plan
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("gpt2-1.5b").reduced(), num_layers=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # the planner on the FULL-SCALE model shows the Eq.-5 split logic
+    full = get_arch("opt-66b")
+    wl = cm.WorkloadSpec(prompt_len=1000, new_tokens=220, microbatch=16)
+    p = plan(full, wl, d=8)
+    print(f"planner (OPT-66B, D=8): Dp={p.d_prompt} Dt={p.d_token} "
+          f"m={p.m_overhead:.3f} I_c={p.inv_tp_colocated:.2f}s "
+          f"I_dis={p.inv_tp_disagg:.2f}s speedup={p.speedup:.2f}x")
+
+    rng = np.random.default_rng(1)
+    def reqs():
+        rng_ = np.random.default_rng(1)
+        return [Request(rid=i, prompt=rng_.integers(0, cfg.vocab_size, 12)
+                        .astype(np.int32), max_new=6) for i in range(4)]
+
+    base = ServingEngine(cfg, model, params, 4, mode="colocated", microbatch=2)
+    rb = base.run(reqs())
+    dis = ServingEngine(cfg, model, params, 4, mode="disaggregated",
+                        dp_split=(1, 3), microbatch=2)
+    rd = dis.run(reqs())
+    print("tokens identical to colocated:", rd.tokens == rb.tokens)
+    print("P->T prompt-KV bytes over network:", dis.transfer_summary()["net"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, supports_shape
+from repro.configs.registry import ARCHS, PAPER_ARCHS, get_arch, list_archs
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "supports_shape",
+    "ARCHS", "PAPER_ARCHS", "get_arch", "list_archs",
+]

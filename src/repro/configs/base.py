@@ -1,0 +1,219 @@
+"""Architecture + shape configuration system.
+
+Every selectable architecture (``--arch <id>``) is an ``ArchConfig`` instance
+registered in :mod:`repro.configs.registry`.  Shapes (the assigned input-shape
+set) are ``ShapeConfig`` instances.  ``reduced()`` produces the smoke-test
+scale of the same family (tiny widths, few layers/experts) used by unit tests;
+the FULL configs are exercised only through the compile-only dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default: d_model // num_heads
+    activation: str = "silu"                 # silu | gelu | relu2
+    norm: str = "rmsnorm"                    # rmsnorm | layernorm
+    pos_emb: str = "rope"                    # rope | learned | alibi | none
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_ngroups: int = 1
+    # --- hybrid (Hymba) ---
+    sliding_window: int = 0                  # 0 = full attention everywhere
+    num_meta_tokens: int = 0
+    full_attn_layers: Tuple[int, ...] = ()
+    # --- enc-dec ---
+    num_encoder_layers: int = 0
+    cross_attention: bool = False
+    max_source_len: int = 4096
+    # --- VLM ---
+    num_patches: int = 0                     # stub patch-embedding positions
+    # --- misc ---
+    dtype: str = "bfloat16"
+    max_seq_len: int = 524288
+    source: str = ""                         # provenance note
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def context_overhead(self) -> int:
+        """Non-text context slots prepended to the prompt (patches/meta)."""
+        return self.num_patches + self.num_meta_tokens
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test scale config of the same family (CPU-runnable)."""
+        kw = dict(
+            num_layers=2,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            max_seq_len=256,
+            max_source_len=32,
+        )
+        if self.is_moe:
+            kw.update(num_experts=4, experts_per_token=2, d_ff=32)
+        if self.family in ("ssm", "hybrid"):
+            kw.update(ssm_state=8, ssm_head_dim=16, ssm_expand=2)
+        if self.family == "hybrid":
+            kw.update(sliding_window=16, num_meta_tokens=4, full_attn_layers=(0,))
+        if self.family == "encdec":
+            kw.update(num_encoder_layers=2)
+        if self.family == "vlm":
+            kw.update(num_patches=8)
+        return replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Total parameter count N (analytic)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        per_layer = 0
+        if self.family != "ssm":
+            # attention: q,k,v,o projections
+            per_layer += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.family in ("ssm", "hybrid"):
+            di = self.d_inner
+            # in_proj (z,x,B,C,dt) + out_proj + conv + A,D
+            g = self.ssm_ngroups
+            per_layer += d * (2 * di + 2 * g * self.ssm_state + self.ssm_nheads)
+            per_layer += di * d
+            per_layer += self.ssm_conv * (di + 2 * g * self.ssm_state)
+            per_layer += 2 * self.ssm_nheads
+        if self.is_moe:
+            per_layer += self.num_experts * 3 * d * self.d_ff  # gated experts
+            per_layer += d * self.num_experts                  # router
+        elif self.d_ff:
+            n_mats = 3 if self.activation == "silu" else 2     # gated vs plain
+            per_layer += n_mats * d * self.d_ff
+        per_layer += 2 * d                                     # norms
+        total = self.num_layers * per_layer
+        if self.cross_attention:
+            total += self.num_layers * (d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d + d)
+        if self.num_encoder_layers:
+            enc_layer = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            n_mats = 3 if self.activation == "silu" else 2
+            enc_layer += n_mats * d * self.d_ff + 2 * d
+            total += self.num_encoder_layers * enc_layer
+        total += self.vocab_size * d                           # embed
+        if not self.tie_embeddings:
+            total += self.vocab_size * d                       # lm head
+        if self.num_meta_tokens:
+            total += self.num_meta_tokens * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only routed experts count)."""
+        if not self.is_moe:
+            return self.param_count()
+        total = self.param_count()
+        expert_params = self.num_layers * self.num_experts * 3 * self.d_model * self.d_ff
+        active_expert = self.num_layers * self.experts_per_token * 3 * self.d_model * self.d_ff
+        return total - expert_params + active_expert
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """Decode-state bytes appended per generated token (per request)."""
+        if self.family == "ssm":
+            return 0  # fixed-size state, nothing appended
+        n_attn_layers = self.num_layers
+        return n_attn_layers * 2 * self.kv_dim * dtype_bytes
+
+    def decode_state_bytes(self, seq_len: int, dtype_bytes: int = 2) -> int:
+        """Total decode-state footprint for one request at context seq_len."""
+        total = 0
+        if self.family == "ssm":
+            total += self.num_layers * self.ssm_nheads * self.ssm_head_dim * self.ssm_state * 4
+            return total
+        if self.family == "hybrid":
+            # SSM state + windowed KV on SWA layers + full KV on global layers
+            total += self.num_layers * self.ssm_nheads * self.ssm_head_dim * self.ssm_state * 4
+            n_full = len(self.full_attn_layers)
+            n_swa = self.num_layers - n_full
+            w = min(self.sliding_window or seq_len, seq_len)
+            total += n_swa * 2 * self.kv_dim * w * dtype_bytes
+            total += n_full * 2 * self.kv_dim * seq_len * dtype_bytes
+            return total
+        total += self.num_layers * 2 * self.kv_dim * seq_len * dtype_bytes
+        if self.cross_attention:
+            total += self.num_layers * 2 * self.kv_dim * min(self.max_source_len, seq_len) * dtype_bytes
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports_shape(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(supported, reason-if-not).  long_500k needs sub-quadratic decode state."""
+    if shape.name == "long_500k" and arch.family not in ("ssm", "hybrid"):
+        return False, (
+            "long_500k requires sub-quadratic attention; %s is a pure "
+            "full-attention arch (512k dense KV cache) — skipped per assignment, "
+            "see DESIGN.md §Arch-applicability" % arch.name
+        )
+    return True, ""

@@ -1,0 +1,42 @@
+"""Registry of all selectable architectures (``--arch <id>``)."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+
+from repro.configs.yi_34b import CONFIG as _yi_34b
+from repro.configs.nemotron_4_340b import CONFIG as _nemotron
+from repro.configs.smollm_360m import CONFIG as _smollm
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.phi_3_vision_4_2b import CONFIG as _phi3v
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.opt_66b import CONFIG as _opt66b
+from repro.configs.bloom_176b import CONFIG as _bloom
+from repro.configs.gpt2_1_5b import CONFIG as _gpt2
+
+# The 10 assigned architectures (dry-run + roofline matrix).
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        _yi_34b, _nemotron, _smollm, _internlm2, _seamless,
+        _moonshot, _qwen3_moe, _hymba, _phi3v, _mamba2,
+    )
+}
+
+# The paper's own evaluation models (benchmarks/figures).
+PAPER_ARCHS: dict[str, ArchConfig] = {c.name: c for c in (_opt66b, _bloom, _gpt2)}
+
+_ALL = {**ARCHS, **PAPER_ARCHS}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in _ALL:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_ALL)}")
+    return _ALL[name]
+
+
+def list_archs(include_paper: bool = False) -> list[str]:
+    return sorted(_ALL if include_paper else ARCHS)

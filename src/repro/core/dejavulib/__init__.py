@@ -1,0 +1,15 @@
+from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore, TransferRecord
+from repro.core.dejavulib.transport import (HardwareModel, Transport,
+                                            LocalTransport, HostLinkTransport,
+                                            NetworkTransport, ICITransport)
+from repro.core.dejavulib.primitives import (CacheChunk, flush, fetch, scatter,
+                                             gather, stream_out, stream_in,
+                                             plan_repartition, PipelineTopo)
+from repro.core.dejavulib.streamer import StreamEngine
+
+__all__ = [
+    "HostMemoryStore", "SSDStore", "TransferRecord", "HardwareModel",
+    "Transport", "LocalTransport", "HostLinkTransport", "NetworkTransport",
+    "ICITransport", "CacheChunk", "flush", "fetch", "scatter", "gather",
+    "stream_out", "stream_in", "plan_repartition", "PipelineTopo", "StreamEngine",
+]

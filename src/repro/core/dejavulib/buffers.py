@@ -1,0 +1,122 @@
+"""Host-side buffer stores for KV-cache streaming.
+
+`HostMemoryStore` models a node's pinned CPU memory (the paper's swap /
+replication target); `SSDStore` persists to disk (the paper's "persistent
+storage" replication option) with atomic writes so a crashed writer never
+leaves a torn replica.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class TransferRecord:
+    kind: str            # e.g. "flush", "fetch", "net", "pack"
+    nbytes: int
+    model_seconds: float  # simulated-hardware time (bandwidth/latency model)
+    wall_seconds: float   # actual wall time on this container
+    tag: str = ""
+
+
+class HostMemoryStore:
+    """Named numpy buffer store with capacity accounting (pinned host RAM)."""
+
+    def __init__(self, name: str = "host", capacity_bytes: Optional[int] = None):
+        self.name = name
+        self.capacity_bytes = capacity_bytes
+        self._data: Dict[str, np.ndarray] = {}
+        self._lock = threading.Lock()
+
+    def put(self, key: str, array: np.ndarray) -> None:
+        arr = np.asarray(array)
+        with self._lock:
+            new_bytes = self.used_bytes() - self._nbytes(key) + arr.nbytes
+            if self.capacity_bytes is not None and new_bytes > self.capacity_bytes:
+                raise MemoryError(
+                    f"store {self.name!r}: {new_bytes} > capacity {self.capacity_bytes}")
+            self._data[key] = arr
+
+    def get(self, key: str) -> np.ndarray:
+        with self._lock:
+            return self._data[key]
+
+    def pop(self, key: str) -> np.ndarray:
+        with self._lock:
+            return self._data.pop(key)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def keys(self):
+        with self._lock:
+            return list(self._data)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def used_bytes(self) -> int:
+        return sum(a.nbytes for a in self._data.values())
+
+    def _nbytes(self, key: str) -> int:
+        a = self._data.get(key)
+        return 0 if a is None else a.nbytes
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+
+class SSDStore:
+    """Disk-backed store (npy files, atomic rename).  Survives process death —
+    used for persistent KV replication and checkpoint shards."""
+
+    def __init__(self, root: str, name: str = "ssd"):
+        self.name = name
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.replace("/", "__") + ".npy")
+
+    def put(self, key: str, array: np.ndarray) -> None:
+        path = self._path(key)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with self._lock:
+            with open(tmp, "wb") as f:   # np.save(str) appends .npy — avoid
+                np.save(f, np.asarray(array))
+            os.replace(tmp, path)  # atomic
+
+    def get(self, key: str) -> np.ndarray:
+        return np.load(self._path(key))
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def keys(self):
+        return [f[:-4].replace("__", "/") for f in os.listdir(self.root)
+                if f.endswith(".npy")]
+
+    def used_bytes(self) -> int:
+        return sum(os.path.getsize(os.path.join(self.root, f))
+                   for f in os.listdir(self.root) if f.endswith(".npy"))
+
+    def clear(self) -> None:
+        for f in list(os.listdir(self.root)):
+            if f.endswith(".npy"):
+                os.remove(os.path.join(self.root, f))

@@ -1,0 +1,263 @@
+"""DéjàVuLib primitives (paper §4.1.2, Table 1).
+
+Layered exactly as in the paper:
+
+  stream_out / stream_in   top level — given source/destination pipeline
+                           topologies (depths, microbatch sizes), plan which
+                           chunks of the stacked decode state go to which
+                           peer (splitting at the source / merging at the
+                           destination) and move them;
+  scatter / gather         middle — turn a non-contiguous region of the
+                           cache into contiguous transfers (the Pallas
+                           `kv_pack` kernel implements the paper's
+                           "buffered copies" optimization) and orchestrate
+                           movement;
+  flush / fetch            bottom — one contiguous chunk, local or remote
+                           (CUDA/NCCL/MPI in the paper → host-link / ICI /
+                           DCN transports here).
+
+Decode-state leaves are addressed by path; leaves shaped [L,B,S,...] are
+partitionable over layers/batch/tokens, [L,B,...] over layers/batch, and
+1-D metadata leaves are replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dejavulib.buffers import HostMemoryStore
+from repro.core.dejavulib.transport import Transport
+
+# leaf classification: token axis position (None = no token axis)
+TOKEN_AXIS = 2
+
+
+@dataclass(frozen=True)
+class PipelineTopo:
+    """A pipeline's shape: `depth` stages over `num_layers`, `microbatch`."""
+    depth: int
+    num_layers: int
+    microbatch: int
+
+    def layer_range(self, stage: int) -> Tuple[int, int]:
+        splits = np.array_split(np.arange(self.num_layers), self.depth)
+        seg = splits[stage]
+        return (int(seg[0]), int(seg[-1]) + 1) if len(seg) else (0, 0)
+
+    def stage_of_layer(self, layer: int) -> int:
+        for s in range(self.depth):
+            lo, hi = self.layer_range(s)
+            if lo <= layer < hi:
+                return s
+        raise ValueError(layer)
+
+
+@dataclass(frozen=True)
+class CacheChunk:
+    """A rectangular region of one decode-state leaf."""
+    leaf: str
+    layers: Tuple[int, int]
+    batch: Tuple[int, int]
+    tokens: Optional[Tuple[int, int]] = None   # None = leaf has no token axis
+
+    def key(self, mb: int | str) -> str:
+        t = f"/t{self.tokens[0]}-{self.tokens[1]}" if self.tokens else ""
+        return (f"mb{mb}/{self.leaf}/l{self.layers[0]}-{self.layers[1]}"
+                f"/b{self.batch[0]}-{self.batch[1]}{t}")
+
+
+def _overlap(a: Tuple[int, int], b: Tuple[int, int]) -> Optional[Tuple[int, int]]:
+    lo, hi = max(a[0], b[0]), min(a[1], b[1])
+    return (lo, hi) if lo < hi else None
+
+
+def plan_repartition(src: PipelineTopo, dst: PipelineTopo
+                     ) -> List[Tuple[int, int, Tuple[int, int], Tuple[int, int]]]:
+    """All (src_stage, dst_stage, layer_range, batch_range) intersections.
+
+    Handles differing pipeline depths (layer split/merge) AND differing
+    microbatch sizes (batch split/merge) — the paper's stream_out contract.
+    """
+    assert src.num_layers == dst.num_layers
+    plan = []
+    nb = max(src.microbatch, dst.microbatch)
+    src_b = [(i * src.microbatch, (i + 1) * src.microbatch)
+             for i in range(max(1, nb // src.microbatch))]
+    dst_b = [(j * dst.microbatch, (j + 1) * dst.microbatch)
+             for j in range(max(1, nb // dst.microbatch))]
+    for ss in range(src.depth):
+        sl = src.layer_range(ss)
+        for ds in range(dst.depth):
+            dl = dst.layer_range(ds)
+            lr = _overlap(sl, dl)
+            if lr is None:
+                continue
+            for sb in src_b:
+                for db in dst_b:
+                    br = _overlap(sb, db)
+                    if br is not None:
+                        plan.append((ss, ds, lr, br))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# flush / fetch — one contiguous chunk
+# ---------------------------------------------------------------------------
+
+def flush(array, store, key: str, transport: Transport, *, tag: str = "",
+          n_messages: int = 1) -> int:
+    """Copy one contiguous chunk to a (possibly remote) store."""
+    arr = np.asarray(array)
+    out = transport.transfer(arr, tag=tag or key, n_messages=n_messages)
+    store.put(key, out)
+    return out.nbytes
+
+
+def fetch(store, key: str, transport: Transport, *, tag: str = "") -> np.ndarray:
+    arr = store.get(key)
+    return transport.transfer(arr, tag=tag or key)
+
+
+# ---------------------------------------------------------------------------
+# scatter / gather — non-contiguous regions -> contiguous transfers
+# ---------------------------------------------------------------------------
+
+def scatter(cache_leaf, leaf_name: str, token_range: Tuple[int, int],
+            store, transport: Transport, *, mb: int | str = 0,
+            buffered: bool = True, token_block: int = 8) -> Dict[str, int]:
+    """Stream the token window `token_range` of a stacked leaf [L,B,S,H,D].
+
+    buffered=True (paper opt-1): one `kv_pack` Pallas launch packs the
+    window across all layers into a single contiguous buffer → ONE transfer.
+    buffered=False (paper's baseline): one transfer per (layer, k/v slice),
+    each paying the per-message latency — used by the Fig.-11 benchmark.
+    """
+    t0, t1 = token_range
+    width = t1 - t0
+    l = cache_leaf.shape[0]
+    chunk = CacheChunk(leaf_name, (0, l), (0, cache_leaf.shape[1]), (t0, t1))
+    key = chunk.key(mb)
+    if buffered:
+        from repro.kernels import ops as kops
+        t0a = (t0 // token_block) * token_block           # DMA alignment
+        w = ((t1 - t0a + token_block - 1) // token_block) * token_block
+        w = min(w, cache_leaf.shape[TOKEN_AXIS] - t0a)
+        buf = kops.kv_pack_auto(cache_leaf, t0a, w, token_block=token_block)
+        buf = np.asarray(buf)[:, :, t0 - t0a: t0 - t0a + width]
+        nbytes = flush(buf, store, key, transport, n_messages=1)
+        return {key: nbytes}
+    # baseline: per-layer small copies (L messages, each with latency)
+    out: Dict[str, int] = {}
+    arr = np.asarray(cache_leaf)
+    for li in range(l):
+        k = CacheChunk(leaf_name, (li, li + 1), (0, arr.shape[1]), (t0, t1)).key(mb)
+        out[k] = flush(arr[li: li + 1, :, t0:t1], store, k, transport, n_messages=1)
+    return out
+
+
+def gather(store, leaf_name: str, shape, dtype, chunks: Sequence[CacheChunk],
+           transport: Transport, *, mb: int | str = 0) -> np.ndarray:
+    """Assemble chunks (fetched from `store`) into a dense leaf array."""
+    out = np.zeros(shape, dtype)
+    for ch in chunks:
+        arr = fetch(store, ch.key(mb), transport)
+        sl = [slice(ch.layers[0], ch.layers[1]), slice(ch.batch[0], ch.batch[1])]
+        if ch.tokens is not None:
+            sl.append(slice(ch.tokens[0], ch.tokens[1]))
+        out[tuple(sl)] = arr
+    return out
+
+
+# ---------------------------------------------------------------------------
+# stream_out / stream_in — repartition between pipeline topologies
+# ---------------------------------------------------------------------------
+
+def _leaf_items(state: Dict, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
+    items = []
+    for k, v in state.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            items.extend(_leaf_items(v, path + "/"))
+        else:
+            items.append((path, v))
+    return items
+
+
+def stream_out(state: Dict, src_stage: int, src_topo: PipelineTopo,
+               dst_topo: PipelineTopo, dst_stores: Dict[int, HostMemoryStore],
+               transport: Transport, *, mb: int | str = 0,
+               token_range: Optional[Tuple[int, int]] = None) -> int:
+    """Send this stage's slice of the decode state to the destination
+    pipeline's stores, splitting/merging by layers and batch.  Returns bytes."""
+    plan = plan_repartition(src_topo, dst_topo)
+    my_lr = src_topo.layer_range(src_stage)
+    total = 0
+    for leaf, arr in _leaf_items(state):
+        arr = np.asarray(arr)
+        has_tok = arr.ndim >= 3 and leaf.startswith(("kv", "cross"))
+        has_lb = arr.ndim >= 2 and arr.shape[0] >= 1 and leaf not in ("swa_pos",)
+        if not has_lb:  # metadata leaf: replicate to every dst stage
+            for ds, st in dst_stores.items():
+                total += flush(arr, st, f"mb{mb}/{leaf}", transport)
+            continue
+        for ss, ds, lr, br in plan:
+            if ss != src_stage:
+                continue
+            # local layer index offset within this stage's slice
+            lr_local = (lr[0] - my_lr[0], lr[1] - my_lr[0])
+            if lr_local[0] < 0 or lr_local[1] > arr.shape[0]:
+                continue
+            sl = [slice(*lr_local), slice(*br)]
+            tok = None
+            if has_tok:
+                tok = token_range or (0, arr.shape[TOKEN_AXIS])
+                sl.append(slice(*tok))
+            chunk = CacheChunk(leaf, lr, br, tok)
+            total += flush(arr[tuple(sl)], dst_stores[ds], chunk.key(mb), transport)
+    return total
+
+
+def stream_in(store, dst_stage: int, dst_topo: PipelineTopo,
+              src_topo: PipelineTopo, state_shapes: Dict,
+              transport: Transport, *, mb: int | str = 0,
+              token_range: Optional[Tuple[int, int]] = None) -> Dict:
+    """Rebuild this stage's local decode state from streamed chunks.
+
+    `state_shapes`: nested dict of (shape, dtype) for the LOCAL (per-stage)
+    state.  Shapes' layer axis is this stage's layer count."""
+    plan = plan_repartition(src_topo, dst_topo)
+    my_lr = dst_topo.layer_range(dst_stage)
+
+    def build(shapes, prefix=""):
+        out = {}
+        for k, v in shapes.items():
+            path = f"{prefix}{k}"
+            if isinstance(v, dict):
+                out[k] = build(v, path + "/")
+                continue
+            shape, dtype = v
+            if path == "swa_pos" or len(shape) < 2:
+                out[k] = fetch(store, f"mb{mb}/{path}", transport)
+                continue
+            has_tok = len(shape) >= 3 and path.startswith(("kv", "cross"))
+            chunks = []
+            for ss, ds, lr, br in plan:
+                if ds != dst_stage:
+                    continue
+                tok = (token_range or (0, shape[TOKEN_AXIS])) if has_tok else None
+                # global chunk -> local placement (shift layers to local frame)
+                chunks.append(CacheChunk(path, lr, br, tok))
+            dense = np.zeros(shape, np.dtype(dtype))
+            for ch in chunks:
+                arr = fetch(store, ch.key(mb), transport)
+                sl = [slice(ch.layers[0] - my_lr[0], ch.layers[1] - my_lr[0]),
+                      slice(*ch.batch)]
+                if ch.tokens is not None:
+                    sl.append(slice(*ch.tokens))
+                dense[tuple(sl)] = arr
+            out[k] = dense
+        return out
+
+    return build(state_shapes)

@@ -1,0 +1,113 @@
+"""Transport layer: real data movement + calibrated hardware timing model.
+
+The container has one CPU device, so "remote" copies are real numpy copies
+between stores while *modeled* time comes from a bandwidth/latency model of
+the target deployment (TPU v5e pod).  Every transfer is logged with both
+modeled and wall time; benchmarks read the modeled timeline, tests assert on
+the real data.
+
+GPU-paper → TPU mapping: NCCL → ICI (50 GB/s/link), PCIe → host link
+(16 GB/s), cross-VM 40 Gbps Ethernet → DCN (25 GB/s/pod aggregate, 5 GB/s
+per-stream default).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.dejavulib.buffers import TransferRecord
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """Target-deployment constants (v5e defaults; planner-configurable)."""
+    peak_flops: float = 197e12            # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9                 # bytes/s per chip
+    ici_bw: float = 50e9                  # bytes/s per link
+    host_link_bw: float = 16e9            # device<->host (PCIe-equivalent)
+    dcn_stream_bw: float = 5e9            # per-stream cross-pod
+    host_mem_bw: float = 100e9            # host DRAM memcpy
+    ssd_bw: float = 3e9                   # NVMe sequential write
+    transfer_latency: float = 10e-6       # per-transfer fixed overhead (DMA setup)
+    net_latency: float = 50e-6            # per-message network overhead
+    chips_per_host: int = 4
+
+
+DEFAULT_HW = HardwareModel()
+
+
+class Transport:
+    """Base transport: copies bytes, charges modeled time, logs records."""
+
+    kind = "base"
+
+    def __init__(self, bandwidth: float, latency: float, name: str = ""):
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.name = name or self.kind
+        self.log: List[TransferRecord] = []
+        self._lock = threading.Lock()
+
+    def model_time(self, nbytes: int, n_messages: int = 1) -> float:
+        return self.latency * n_messages + nbytes / self.bandwidth
+
+    def transfer(self, array: np.ndarray, *, tag: str = "",
+                 n_messages: int = 1) -> np.ndarray:
+        """Copy `array` across this transport; returns the received copy."""
+        t0 = time.perf_counter()
+        out = np.array(array, copy=True)
+        wall = time.perf_counter() - t0
+        rec = TransferRecord(self.kind, out.nbytes,
+                             self.model_time(out.nbytes, n_messages), wall, tag)
+        with self._lock:
+            self.log.append(rec)
+        return out
+
+    def modeled_total(self) -> float:
+        with self._lock:
+            return sum(r.model_seconds for r in self.log)
+
+    def bytes_total(self) -> int:
+        with self._lock:
+            return sum(r.nbytes for r in self.log)
+
+    def reset_log(self) -> None:
+        with self._lock:
+            self.log.clear()
+
+
+class LocalTransport(Transport):
+    """Same-host DRAM copy."""
+    kind = "local"
+
+    def __init__(self, hw: HardwareModel = DEFAULT_HW):
+        super().__init__(hw.host_mem_bw, hw.transfer_latency)
+
+
+class HostLinkTransport(Transport):
+    """Device HBM <-> host RAM (the PCIe role in the paper; swap path)."""
+    kind = "hostlink"
+
+    def __init__(self, hw: HardwareModel = DEFAULT_HW):
+        super().__init__(hw.host_link_bw, hw.transfer_latency)
+
+
+class ICITransport(Transport):
+    """Chip-to-chip intra-pod (NCCL role for P→T transfers inside a pod)."""
+    kind = "ici"
+
+    def __init__(self, hw: HardwareModel = DEFAULT_HW):
+        super().__init__(hw.ici_bw, hw.transfer_latency)
+
+
+class NetworkTransport(Transport):
+    """Cross-host / cross-pod stream (the paper's 40 Gbps inter-VM link)."""
+    kind = "net"
+
+    def __init__(self, hw: HardwareModel = DEFAULT_HW,
+                 bandwidth: Optional[float] = None):
+        super().__init__(bandwidth or hw.dcn_stream_bw, hw.net_latency)

@@ -1,0 +1,216 @@
+"""DéjàVu workers: one logical machine = one pipeline stage.
+
+A `StageWorker` owns a contiguous layer slice of the model (jitted stage
+functions), its device-resident KV slots, a host memory store (swap target +
+prompt-KV landing zone), and a replica store holding its ring-predecessor's
+KV copies (paper §4.2.3: worker x streams to worker (x+1)%N).
+
+Failure semantics (paper): killing a worker loses BOTH its device KV and the
+replica it hosts; `CacheManager` streams are how every byte moves (DéjàVuLib
+primitives only — no ad-hoc copies).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dejavulib import (HostMemoryStore, LocalTransport,
+                                  HostLinkTransport, NetworkTransport,
+                                  StreamEngine)
+from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+
+
+class CacheManager:
+    """Per-worker KV movement: swap in/out, replicate, receive (paper Fig. 5).
+
+    `compress_replicas=True` (beyond-paper) int8-quantizes each replicated KV
+    window (per-window scale) before it crosses the network and dequantizes
+    into the peer's replica store — the wire bytes halve vs bf16 while the
+    recovery path stays byte-layout-identical.  The quantization error only
+    ever enters live state after an actual failure restore.
+    """
+
+    def __init__(self, wid: int, hw: HardwareModel, streamer: StreamEngine,
+                 token_block: int = 8, compress_replicas: bool = False):
+        self.wid = wid
+        self.host = HostMemoryStore(f"w{wid}-host")        # swap + prompt landing
+        self.replica = HostMemoryStore(f"w{wid}-replica")  # peer's KV copies
+        self.hostlink = HostLinkTransport(hw)
+        self.net = NetworkTransport(hw)
+        self.local = LocalTransport(hw)
+        self.streamer = streamer
+        self.token_block = token_block
+        self.compress_replicas = compress_replicas
+
+    # --- swapping (microbatch granularity, paper §4.2.2) -------------------
+    def swap_out(self, mb: int, kv: Dict[str, jax.Array],
+                 token_range: Optional[Tuple[int, int]] = None) -> None:
+        """Offload a microbatch's stage KV to host.  With `token_range`, only
+        the newly-written window moves (buffered copies via kv_pack)."""
+        from repro.kernels import ops as kops
+        for leaf, arr in kv.items():
+            key = f"swap/mb{mb}/{leaf}"
+            if token_range is None:
+                buf = self.hostlink.transfer(np.asarray(arr), tag=key)
+                self.host.put(key, buf)     # transfer() copy is writable
+                continue
+            t0, t1 = token_range
+            tb = self.token_block
+            t0a = (t0 // tb) * tb
+            w = min(-(-(t1 - t0a) // tb) * tb, arr.shape[2] - t0a)
+            packed = np.asarray(kops.kv_pack_auto(arr, t0a, w, token_block=tb))
+            self.hostlink.transfer(packed, tag=key)
+            dense = self.host.get(key)          # update host copy in place
+            dense[:, :, t0a:t0a + w] = packed
+            self.host.put(key, dense)
+
+    def swap_in(self, mb: int, shape, dtype) -> Dict[str, jax.Array]:
+        out = {}
+        for leaf in ("k", "v"):
+            key = f"swap/mb{mb}/{leaf}"
+            arr = self.host.get(key)
+            self.hostlink.transfer(arr, tag=key)
+            out[leaf] = jnp.asarray(arr)
+        return out
+
+    def host_has(self, mb: int) -> bool:
+        return f"swap/mb{mb}/k" in self.host
+
+    # --- replication (ring, token-level, paper §4.2.3) ----------------------
+    def replicate_to(self, peer: "CacheManager", mb: int,
+                     kv: Dict[str, jax.Array], token_range: Tuple[int, int],
+                     step: int, ack_cb) -> None:
+        """Stream the KV delta [t0,t1) to the ring successor's replica store.
+        Runs on the background streamer (overlapped with the next step)."""
+        from repro.kernels import ops as kops
+        t0, t1 = token_range
+        tb = self.token_block
+        t0a = (t0 // tb) * tb
+        packed = {}
+        for leaf, arr in kv.items():
+            w = min(-(-(t1 - t0a) // tb) * tb, arr.shape[2] - t0a)
+            packed[leaf] = (np.asarray(kops.kv_pack_auto(arr, t0a, w, token_block=tb)),
+                            arr.shape, arr.dtype)
+
+        def _send():
+            nbytes = 0
+            for leaf, (buf, shape, dtype) in packed.items():
+                key = f"w{self.wid}/mb{mb}/{leaf}"
+                if self.compress_replicas:
+                    scale = max(float(np.max(np.abs(buf))), 1e-8) / 127.0
+                    q = np.clip(np.round(buf.astype(np.float32) / scale),
+                                -127, 127).astype(np.int8)
+                    sent = self.net.transfer(q, tag=key + "/int8")
+                    recv = (sent.astype(np.float32) * scale).astype(dtype)
+                else:
+                    sent = self.net.transfer(buf, tag=key)
+                    recv = sent
+                if key in peer.replica:
+                    dense = peer.replica.get(key)
+                else:
+                    dense = np.zeros(shape, dtype)
+                dense[:, :, t0a:t0a + recv.shape[2]] = recv
+                peer.replica.put(key, dense)
+                nbytes += sent.nbytes
+            ack_cb(self.wid, mb, step)
+            return nbytes
+
+        raw = sum(b.nbytes for b, _, _ in packed.values())
+        model_s = self.net.model_time(raw // 2 if self.compress_replicas else raw)
+        self.streamer.submit(_send, model_seconds=model_s,
+                             tag=f"rep-w{self.wid}-mb{mb}-s{step}")
+
+
+class StageWorker:
+    """One pipeline stage (a machine with `chips` accelerators running TP)."""
+
+    def __init__(self, wid: int, model, full_params, lo: int, hi: int, *,
+                 first: bool, last: bool, role: str = "both",
+                 hw: HardwareModel = DEFAULT_HW,
+                 streamer: Optional[StreamEngine] = None,
+                 compress_replicas: bool = False):
+        self.wid = wid
+        self.model = model
+        self.lo, self.hi = lo, hi
+        self.first, self.last = first, last
+        self.role = role                      # "prompt" | "token" | "both"
+        self.alive = True
+        self.last_heartbeat = time.monotonic()
+        self.sp = model.slice_params(full_params, lo, hi, first=first, last=last)
+        self.kv: Dict[int, Dict[str, jax.Array]] = {}   # device-resident slots
+        self.cache = CacheManager(wid, hw, streamer or StreamEngine(f"w{wid}"),
+                                  compress_replicas=compress_replicas)
+        self.slow_factor = 1.0                # straggler injection knob
+
+        mf = model
+        if first:
+            self._prefill = jax.jit(lambda sp, tokens: mf.stage_prefill(
+                sp, None, first=True, last=last, tokens=tokens))
+            self._decode = jax.jit(lambda sp, token, kc, vc, pos: mf.stage_decode(
+                sp, None, kc, vc, pos, first=True, last=last, token=token))
+        else:
+            self._prefill = jax.jit(lambda sp, x: mf.stage_prefill(
+                sp, x, first=False, last=last))
+            self._decode = jax.jit(lambda sp, x, kc, vc, pos: mf.stage_decode(
+                sp, x, kc, vc, pos, first=False, last=last))
+
+    # ------------------------------------------------------------------
+    def heartbeat(self) -> bool:
+        if self.alive:
+            self.last_heartbeat = time.monotonic()
+        return self.alive
+
+    def kill(self) -> None:
+        """Machine failure: device KV, host store, and hosted replica all die."""
+        self.alive = False
+        self.kv.clear()
+        self.cache.host.clear()
+        self.cache.replica.clear()
+
+    def _check(self):
+        if not self.alive:
+            raise RuntimeError(f"worker {self.wid} is dead")
+
+    # ------------------------------------------------------------------
+    def prefill(self, mb: int, x_or_tokens, max_len: int):
+        self._check()
+        if self.first:
+            x, ks, vs = self._prefill(self.sp, x_or_tokens)
+        else:
+            x, ks, vs = self._prefill(self.sp, x_or_tokens)
+        s = ks.shape[2]
+        kc = jnp.zeros(ks.shape[:2] + (max_len,) + ks.shape[3:], ks.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, ks, 0, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vs, 0, axis=2)
+        self.kv[mb] = {"k": kc, "v": vc}
+        return x
+
+    def decode(self, mb: int, x_or_token, pos: int):
+        self._check()
+        slot = self.kv[mb]
+        x, kc, vc = self._decode(self.sp, x_or_token, slot["k"], slot["v"],
+                                 jnp.int32(pos))
+        self.kv[mb] = {"k": kc, "v": vc}
+        return x
+
+    # --- swapping ------------------------------------------------------
+    def offload(self, mb: int, token_range=None) -> None:
+        if mb in self.kv:
+            self.cache.swap_out(mb, self.kv[mb], token_range)
+            del self.kv[mb]
+
+    def restore(self, mb: int) -> None:
+        if mb not in self.kv and self.cache.host_has(mb):
+            self.kv[mb] = self.cache.swap_in(mb, None, None)
+
+    def resident(self) -> int:
+        return len(self.kv)
+
+    def install_kv(self, mb: int, arrays: Dict[str, np.ndarray]) -> None:
+        self.kv[mb] = {k: jnp.asarray(v) for k, v in arrays.items()}

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (param_shardings, batch_shardings,
+                                        state_shardings, fsdp_enabled,
+                                        activation_rules)
+
+__all__ = ["param_shardings", "batch_shardings", "state_shardings",
+           "fsdp_enabled", "activation_rules"]

@@ -1,0 +1,220 @@
+"""Name-based sharding rules for the production mesh.
+
+Mesh axes: ("data", "model") single-pod / ("pod", "data", "model") multi-pod.
+
+  batch        → (pod, data)
+  heads/ff/vocab/experts (weight columns) → model        (tensor / expert par.)
+  d_model rows of big-arch weights        → (pod, data)  (FSDP / ZeRO-style)
+  decode KV cache: batch → (pod, data), seq → model      (flash-decode style
+      sequence sharding: avoids padding waste for kv_heads ∤ 16 and keeps
+      per-chip KV under HBM limits at 32k contexts)
+  long_500k (batch=1): full-attn KV seq → data, SSM heads → model
+
+FSDP kicks in when bf16 params exceed `FSDP_THRESHOLD_BYTES` (the weights no
+longer fit replicated per-chip next to activations).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+FSDP_THRESHOLD_BYTES = 4e9
+
+
+def fsdp_enabled(cfg: ArchConfig) -> bool:
+    return cfg.param_count() * 2 > FSDP_THRESHOLD_BYTES
+
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    dp = ("pod", "data") if "pod" in names else ("data",)
+    return dp, "model"
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def param_spec(path: str, shape, cfg: ArchConfig, mesh: Mesh,
+               variant: str = "baseline") -> P:
+    dp, mp = _axes(mesh)
+    fsdp = dp if fsdp_enabled(cfg) else None
+    leaf = path.split("/")[-1]
+    container = path.split("/")[-2] if "/" in path else ""
+
+    def dprow(dim):  # FSDP-shard a d_model-sized dim if divisible
+        return fsdp if (fsdp and _divisible(dim, mesh, fsdp)) else None
+
+    def mcol(dim):
+        return mp if _divisible(dim, mesh, mp) else None
+
+    if leaf in ("embed",):
+        if variant == "opt-rowssm" and mcol(shape[0]) is None \
+                and dprow(shape[1]) is None and _divisible(shape[1], mesh, mp):
+            # vocab not divisible by TP width: shard d_model instead so the
+            # (tied) head matmul partial-sums with a tiny psum
+            return P(None, mp)
+        return P(mcol(shape[0]), dprow(shape[1]))
+    if leaf == "lm_head":
+        if variant == "opt-rowssm" and mcol(shape[1]) is None \
+                and dprow(shape[0]) is None and _divisible(shape[0], mesh, mp):
+            return P(mp, None)
+        return P(dprow(shape[0]), mcol(shape[1]))
+    if leaf in ("pos_table", "src_pos", "meta", "patch_proj"):
+        return P(*([None] * len(shape)))
+    if container == "attn" or container == "cross":
+        if leaf in ("wq", "wk", "wv"):
+            return P(None, dprow(shape[1]), mcol(shape[2]))
+        if leaf == "wo":
+            return P(None, mcol(shape[1]), dprow(shape[2]))
+    if container == "mlp":
+        if variant == "opt-zmlp":
+            # ZeRO-style MLP: weights FSDP-only (gathered per layer); tokens
+            # seq-sharded over `model` -> no ff-contraction all-reduce
+            if leaf in ("w_gate", "w_up"):
+                return P(None, dprow(shape[1]), None)
+            if leaf == "w_down":
+                return P(None, None, dprow(shape[2]))
+        if leaf in ("w_gate", "w_up"):
+            return P(None, dprow(shape[1]), mcol(shape[2]))
+        if leaf == "w_down":
+            return P(None, mcol(shape[1]), dprow(shape[2]))
+    if container == "moe":
+        if leaf == "router":
+            return P(None, None, None)
+        if leaf in ("w_gate", "w_up"):
+            return P(None, mcol(shape[1]), dprow(shape[2]), None)   # experts → model
+        if leaf == "w_down":
+            return P(None, mcol(shape[1]), None, dprow(shape[3]))
+    if container == "ssm":
+        if variant == "opt-rowssm" and leaf in ("w_in", "w_out"):
+            # batch=1 decode is weight-traffic-bound: shard weight ROWS over
+            # `model` (1/16 weight reads/chip, tiny psum of the output) —
+            # row sharding doesn't conflict with the z/x/B/C column slices
+            return P(None, mcol(shape[1]), None)
+        if leaf in ("w_in", "w_out"):
+            return P(None, dprow(shape[1]), None)
+        return P(*([None] * len(shape)))
+    # norms, scalars, fuse scales, conv weights: replicated
+    return P(*([None] * len(shape)))
+
+
+def _tree_with_paths(tree, fn, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _tree_with_paths(v, fn, f"{prefix}{k}/") for k, v in tree.items()}
+    if hasattr(tree, "_asdict"):
+        return type(tree)(**{k: _tree_with_paths(v, fn, f"{prefix}{k}/")
+                             for k, v in tree._asdict().items()})
+    return fn(prefix[:-1], tree)
+
+
+def param_shardings(params_shapes, cfg: ArchConfig, mesh: Mesh,
+                    variant: str = "baseline"):
+    """NamedSharding tree for a params (or optimizer m/v) pytree of
+    ShapeDtypeStructs."""
+    def mk(path, leaf):
+        # strip the leading container for optimizer trees (m/, v/)
+        p = path
+        for pre in ("m/", "v/"):
+            if p.startswith(pre):
+                p = p[len(pre):]
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(p, leaf.shape, cfg, mesh, variant))
+    return _tree_with_paths(params_shapes, mk)
+
+
+def batch_shardings(batch_shapes, cfg: ArchConfig, mesh: Mesh):
+    dp, _ = _axes(mesh)
+
+    def mk(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = [None] * leaf.ndim
+        if leaf.shape[0] % _size(mesh, dp) == 0:
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+    return _tree_with_paths(batch_shapes, mk)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def state_shardings(state_shapes, cfg: ArchConfig, mesh: Mesh,
+                    batch: int) -> Dict:
+    """Decode-state sharding: batch → dp when divisible; else (batch=1 long
+    context) shard the seq/window axis over data and heads over model."""
+    dp, mp = _axes(mesh)
+    dp_n = _size(mesh, dp)
+    mp_n = mesh.shape[mp]
+
+    def mk(path, leaf):
+        if isinstance(leaf, tuple):      # (shape, dtype) form
+            leaf = jax.ShapeDtypeStruct(leaf[0], jnp.dtype(leaf[1]))
+        spec = [None] * leaf.ndim
+        name = path.split("/")[-1]
+        if path == "swa_pos" or leaf.ndim <= 1:
+            return NamedSharding(mesh, P(*spec))
+        if path.startswith(("kv", "cross")):
+            # [L, B, S, H, D]
+            if batch % dp_n == 0 and batch >= dp_n:
+                spec[1] = dp
+                if leaf.shape[2] % mp_n == 0:
+                    spec[2] = mp                      # seq → model
+            else:
+                if leaf.shape[2] % dp_n == 0:
+                    spec[2] = dp                      # long-context: seq → data
+            return NamedSharding(mesh, P(*spec))
+        if path == "ssd":
+            # [L, B, nh, hd, N]
+            if batch % dp_n == 0 and batch >= dp_n:
+                spec[1] = dp
+            if leaf.shape[2] % mp_n == 0:
+                spec[2] = mp
+            return NamedSharding(mesh, P(*spec))
+        if path == "conv":
+            # [L, B, K-1, conv_dim] — conv_dim stays UNSHARDED: the state is
+            # tiny and its x/B/C part boundaries don't align with 1/16 shards
+            # (sharding it forces involuntary full remats on every slice)
+            if batch % dp_n == 0 and batch >= dp_n:
+                spec[1] = dp
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*spec))
+    return _tree_with_paths(state_shapes, mk)
+
+
+def activation_rules(mesh: Mesh, variant: str = "baseline",
+                     kind: str = "train") -> Optional[Dict[str, object]]:
+    """Logical-axis rules installed into models.common (hillclimb lever).
+
+    baseline: None — no activation constraints; GSPMD propagates from the
+              weight/IO shardings alone (the paper-faithful starting point).
+    opt:      explicit tensor-parallel activations — heads/kv_heads/ff/
+              experts/vocab → model (GSPMD pads non-divisible head counts),
+              d_inner/ssm groups → model (Mamba inner parallelism), and
+              seq → model on the residual stream for train (Megatron-style
+              sequence parallelism: saved activations shrink 16×).
+    """
+    if variant == "baseline":
+        return None
+    dp, mp = _axes(mesh)
+    rules = {"batch": dp, "heads": mp, "kv_heads": mp, "ff": mp,
+             "vocab": mp, "experts": mp, "d_inner": mp, "ssm_gn": None,
+             "ssm_heads": mp, "seq": mp if kind == "train" else None,
+             "__sizes__": {a: int(mesh.shape[a]) for a in mesh.axis_names}}
+    if variant == "opt-zmlp":
+        rules["ff"] = None
+        rules["mlp_seq"] = mp
+    return rules

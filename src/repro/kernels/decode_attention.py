@@ -1,0 +1,88 @@
+"""Single-token decode attention (memory-bandwidth hot-spot of token generation).
+
+Flash-decode style: the KV sequence is tiled into blocks streamed HBM→VMEM;
+the grid iterates (B, Hkv, kv_blocks) with the per-group online-softmax state
+(m, l, acc over the G query heads of the KV head's group) carried in VMEM
+scratch.  A validity mask [S] (from absolute slot positions — supports ring
+buffers / partially-filled caches) is blocked along with K/V.
+
+This is the kernel the DéjàVu T-workers run every step; its arithmetic
+intensity is ~1 FLOP/byte so the roofline bound is HBM bandwidth — block
+sizes are chosen to keep the KV stream dense (bk×D tiles, 128-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)            # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bk, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # [G, bk]
+    valid = valid_ref[...] != 0                          # [bk]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0, :, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, kv_valid, *, block_k: int = 512, interpret: bool = True):
+    """q: [B,Hq,D]; k/v: [B,S,Hkv,D]; kv_valid: [S] bool -> [B,Hq,D]."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    bk = min(block_k, s)
+    pk = (-s) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    valid = jnp.pad(kv_valid.astype(jnp.int32), (0, pk))
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, (s + pk) // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, ik: (bi, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, ik: (bi, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, ik: (bi, ik, h, 0)),
+            pl.BlockSpec((bk,), lambda bi, h, ik: (ik,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, h, ik: (bi, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, valid)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,94 @@
+"""Causal GQA flash attention (prefill compute hot-spot).
+
+Grid (B, Hq, num_q_blocks, num_kv_blocks) with the KV dimension innermost; the
+online-softmax running max / sum / accumulator live in VMEM scratch and carry
+across KV blocks.  Blocks are 128-aligned on the MXU contraction dims.  GQA is
+expressed in the K/V index_map (q-head h reads kv-head h // group).
+
+Validated against `ref.flash_attention_ref` in interpret mode on CPU; compiled
+path targets TPU v5e (bf16 inputs, f32 softmax state).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale, bq, bk, causal, sq, skv):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)           # [bq, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # [bk, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                               # [bq, bk]
+
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = kpos < skv
+    if causal:
+        valid &= kpos <= qpos + (skv - sq)              # offset-causal
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _emit():
+        o_ref[0, :, 0, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D] -> [B,Sq,Hq,D]."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    # pad seq dims to block multiples (masked out via kpos/qpos validity)
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    grid = (b, hq, (sq + pq) // bq, (skv + pk) // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=d ** -0.5, bq=bq, bk=bk,
+                          causal=causal, sq=sq, skv=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda bi, h, iq, ik: (bi, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, iq, ik: (bi, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda bi, h, iq, ik: (bi, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d), lambda bi, h, iq, ik: (bi, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq + pq, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]

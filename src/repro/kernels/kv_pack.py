@@ -1,0 +1,83 @@
+"""kv_pack / kv_unpack — the DéjàVuLib "buffered copies" kernels (paper §4.1 opt-1).
+
+GPU original: token generation updates one tiny non-contiguous KV slice per
+layer; issuing L×B small cudaMemcpys dominates streaming cost, so DéjàVu
+aggregates them into one contiguous GPU buffer first.
+
+TPU adaptation: one `pallas_call` whose grid covers (layer × batch × token
+blocks) gathers the strided window of the stacked cache [L,B,S,H,D] into a
+single dense staging buffer [L,B,W,H,D] in one HBM pass — the buffer then
+leaves the chip as a single contiguous DMA.  `kv_unpack` is the inverse
+scatter (restore / swap-in), aliasing the cache operand for in-place update.
+
+The dynamic token offset arrives via scalar prefetch; block alignment of the
+offset is a DMA-alignment requirement enforced by the cache manager
+(`repro.core.dejavulib`), which rounds windows to ``token_block``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(t0_ref, src_ref, dst_ref):
+    del t0_ref
+    dst_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("width", "token_block", "interpret"))
+def kv_pack(cache, t0, *, width: int, token_block: int = 8, interpret: bool = True):
+    """Pack cache[:, :, t0:t0+width] into a contiguous buffer.
+
+    cache: [L,B,S,H,D]; t0: scalar int32, multiple of token_block.
+    Returns [L,B,width,H,D].
+    """
+    l, b, s, h, d = cache.shape
+    bt = min(token_block, width)
+    assert width % bt == 0, (width, bt)
+    grid = (l, b, width // bt)
+    spec_in = pl.BlockSpec((1, 1, bt, h, d),
+                           lambda li, bi, i, t0r: (li, bi, t0r[0] // bt + i, 0, 0))
+    spec_out = pl.BlockSpec((1, 1, bt, h, d), lambda li, bi, i, t0r: (li, bi, i, 0, 0))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=[spec_in], out_specs=spec_out),
+        out_shape=jax.ShapeDtypeStruct((l, b, width, h, d), cache.dtype),
+        interpret=interpret,
+    )(jnp.asarray(t0, jnp.int32).reshape(1), cache)
+
+
+def _scatter_kernel(t0_ref, buf_ref, cache_ref, out_ref):
+    del t0_ref, cache_ref
+    out_ref[...] = buf_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("token_block", "interpret"),
+                   donate_argnums=(0,))
+def kv_unpack(cache, buf, t0, *, token_block: int = 8, interpret: bool = True):
+    """Scatter a contiguous buffer back into the cache window at t0 (in-place).
+
+    cache: [L,B,S,H,D] (donated); buf: [L,B,W,H,D]; t0 multiple of token_block.
+    """
+    l, b, s, h, d = cache.shape
+    width = buf.shape[2]
+    bt = min(token_block, width)
+    assert width % bt == 0, (width, bt)
+    grid = (l, b, width // bt)
+    spec_buf = pl.BlockSpec((1, 1, bt, h, d), lambda li, bi, i, t0r: (li, bi, i, 0, 0))
+    spec_cache = pl.BlockSpec((1, 1, bt, h, d),
+                              lambda li, bi, i, t0r: (li, bi, t0r[0] // bt + i, 0, 0))
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[spec_buf, spec_cache], out_specs=spec_cache),
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={2: 0},  # cache operand (after scalar) -> output
+        interpret=interpret,
+    )(jnp.asarray(t0, jnp.int32).reshape(1), buf.astype(cache.dtype), cache)

@@ -1,0 +1,59 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+Models call these via ``backend="pallas"``.  On this CPU container the
+kernels execute in interpret mode (`INTERPRET=True`); on TPU the flag flips
+to compiled mode.  Wrappers adapt the models' masked-attention interface to
+the kernels' position-based one and fall back to the jnp reference for
+shapes the kernels don't cover (e.g. additive-bias attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.kv_pack import kv_pack, kv_unpack
+from repro.kernels.ssd_scan import ssd_scan
+
+# flip to False on real TPU devices
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def attention_auto(q, k, v, mask=None, bias=None):
+    """Prefill attention entry point.  Uses the flash kernel for the plain
+    causal case; falls back to the reference for exotic masks/bias."""
+    b, sq, hq, d = q.shape
+    plain_causal = bias is None and (mask is None or _is_plain_causal(mask, sq, k.shape[1]))
+    if plain_causal:
+        return flash_attention(q, k, v, causal=mask is not None, interpret=INTERPRET)
+    from repro.models.attention import attend
+    return attend(q, k, v, mask=mask, bias=bias, backend="xla")
+
+
+def _is_plain_causal(mask, sq, skv) -> bool:
+    # static structural check only (trace-safe): 2-D mask of full extent
+    return mask.ndim == 2 and mask.shape == (sq, skv) and sq == skv
+
+
+def decode_attention_auto(q, k_cache, v_cache, mask):
+    """Decode attention entry point.  q: [B,1,Hq,D]; mask: [1,Skv] bool."""
+    valid = mask[0] if mask.ndim == 2 else mask
+    out = decode_attention(q[:, 0], k_cache, v_cache, valid, interpret=INTERPRET)
+    return out[:, None]
+
+
+def ssd_auto(x, dt, a_neg, bmat, cmat, chunk=128, h0=None):
+    return ssd_scan(x, dt, a_neg, bmat, cmat, h0=h0, chunk=min(chunk, x.shape[1]),
+                    interpret=INTERPRET)
+
+
+def kv_pack_auto(cache, t0, width, token_block: int = 8):
+    return kv_pack(cache, t0, width=width, token_block=token_block,
+                   interpret=INTERPRET)
+
+
+def kv_unpack_auto(cache, buf, t0, token_block: int = 8):
+    return kv_unpack(cache, buf, t0, token_block=token_block,
+                     interpret=INTERPRET)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (tested via assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# kv_pack / kv_unpack — DéjàVuLib buffered copies
+# ---------------------------------------------------------------------------
+
+def kv_pack_ref(cache, t0, width: int):
+    """cache: [L,B,S,H,D] -> contiguous window [L,B,width,H,D] at t0."""
+    return jax.lax.dynamic_slice_in_dim(cache, t0, width, axis=2)
+
+
+def kv_unpack_ref(cache, buf, t0):
+    """Scatter buf [L,B,W,H,D] back into cache at token offset t0."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, buf.astype(cache.dtype), t0, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill, causal, GQA)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D] -> [B,Sq,Hq,D].  f32 softmax."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single query vs long KV, validity mask)
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q, k, v, kv_valid):
+    """q: [B,Hq,D]; k/v: [B,S,Hkv,D]; kv_valid: [S] bool -> [B,Hq,D]."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.where(kv_valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v)
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# SSD — sequential recurrence oracle (independent of the chunked algorithm)
+# ---------------------------------------------------------------------------
+
+def ssd_sequential_ref(x, dt, a_neg, bmat, cmat, h0=None):
+    """Token-by-token recurrence.  x: [B,S,nh,hd]; dt: [B,S,nh];
+    a_neg: [nh]; bmat/cmat: [B,S,G,N].  Returns (y, h_final)."""
+    b, s, nh, hd = x.shape
+    g, n = bmat.shape[-2:]
+    rep = nh // g
+    h = jnp.zeros((b, nh, hd, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # [b,nh,hd], [b,nh], [b,g,n]
+        bt_h = jnp.repeat(bt, rep, axis=1).astype(jnp.float32)
+        ct_h = jnp.repeat(ct, rep, axis=1).astype(jnp.float32)
+        da = jnp.exp(dtt.astype(jnp.float32) * a_neg)
+        h = h * da[:, :, None, None] + (dtt.astype(jnp.float32)[:, :, None, None]
+                                        * xt.astype(jnp.float32)[:, :, :, None]
+                                        * bt_h[:, :, None, :])
+        y = jnp.einsum("bhdn,bhn->bhd", h, ct_h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,113 @@
+"""Chunked SSD (Mamba-2) scan kernel.
+
+The SSD dual form turns the recurrence into per-chunk dense matmuls (MXU)
+plus a tiny inter-chunk state recurrence.  Grid = (B, num_chunks) with chunks
+innermost-sequential; the running state h [nh,hd,N] (f32) lives in VMEM
+scratch and carries across chunk steps.  An optional initial state h0 supports
+DéjàVu prefill-resume (continuing from a streamed-in SSM state).
+
+Per chunk (Q tokens): intra-chunk (C·Bᵀ ⊙ decay-mask) @ X and the state
+contribution/readout — all [Q×Q] / [Q×N] / [N×hd] matmuls, 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hout_ref, h_scr, *, rep, chunk):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # [Q, nh, hd]
+    dt = dt_ref[0, 0].astype(jnp.float32)        # [Q, nh]
+    a = a_ref[...].astype(jnp.float32)           # [nh]
+    bm = b_ref[0, 0].astype(jnp.float32)         # [Q, G, N]
+    cm = c_ref[0, 0].astype(jnp.float32)         # [Q, G, N]
+    h = h_scr[...]                               # [nh, hd, N]
+
+    da = dt * a                                  # [Q, nh]
+    da_cum = jnp.cumsum(da, axis=0)              # inclusive
+
+    # intra-chunk (mask before exp: see models/ssm.py note on inf·0 grads)
+    li = da_cum[:, None, :] - da_cum[None, :, :]          # [i, j, nh]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.exp(jnp.where(tri[:, :, None], li, -1e30))  # [i, j, nh]
+    bh = jnp.repeat(bm, rep, axis=1)                       # [Q, nh, N]
+    ch = jnp.repeat(cm, rep, axis=1)
+    cb = jnp.einsum("ihn,jhn->ijh", ch, bh)                # [i, j, nh]
+    scores = cb * lmat * dt[None, :, :]                    # dt_j
+    y = jnp.einsum("ijh,jhd->ihd", scores, x)
+
+    # inter-chunk: readout of incoming state, then state update
+    y += jnp.einsum("ihn,hdn,ih->ihd", ch, h, jnp.exp(da_cum))
+    decay_states = jnp.exp(da_cum[-1, :][None, :] - da_cum)          # [j, nh]
+    h_new = h * jnp.exp(da_cum[-1, :])[:, None, None] + \
+        jnp.einsum("jhn,jh,jh,jhd->hdn", bh, decay_states, dt, x)
+    h_scr[...] = h_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == pl.num_programs(1) - 1)
+    def _emit():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_neg, bmat, cmat, h0=None, *, chunk: int = 128,
+             interpret: bool = True):
+    """x: [B,S,nh,hd]; dt: [B,S,nh]; a_neg: [nh]; bmat/cmat: [B,S,G,N].
+
+    Returns (y [B,S,nh,hd], h_final [B,nh,hd,N] f32).  S padded to chunk."""
+    b, s, nh, hd = x.shape
+    g, n = bmat.shape[-2:]
+    rep = nh // g
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, n), jnp.float32)
+
+    xs = x.reshape(b, nc, q, nh, hd)
+    dts = dt.reshape(b, nc, q, nh)
+    bs = bmat.reshape(b, nc, q, g, n)
+    cs = cmat.reshape(b, nc, q, g, n)
+    grid = (b, nc)
+
+    y, hout = pl.pallas_call(
+        functools.partial(_ssd_kernel, rep=rep, chunk=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, nh, hd), lambda bi, ic: (bi, ic, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, nh), lambda bi, ic: (bi, ic, 0, 0)),
+            pl.BlockSpec((nh,), lambda bi, ic: (0,)),
+            pl.BlockSpec((1, 1, q, g, n), lambda bi, ic: (bi, ic, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, g, n), lambda bi, ic: (bi, ic, 0, 0, 0)),
+            pl.BlockSpec((1, nh, hd, n), lambda bi, ic: (bi, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, nh, hd), lambda bi, ic: (bi, ic, 0, 0, 0)),
+            pl.BlockSpec((1, nh, hd, n), lambda bi, ic: (bi, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hd, n), jnp.float32)],
+        interpret=interpret,
+    )(xs, dts, a_neg, bs, cs, h0)
+    return y.reshape(b, sp, nh, hd)[:, :s], hout

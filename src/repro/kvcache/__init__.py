@@ -1,0 +1,8 @@
+from repro.kvcache.cache import (
+    decode_state_shapes,
+    init_decode_state,
+    decode_state_specs,
+    state_bytes,
+)
+
+__all__ = ["decode_state_shapes", "init_decode_state", "decode_state_specs", "state_bytes"]

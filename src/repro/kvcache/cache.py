@@ -1,0 +1,95 @@
+"""Decode-state (KV cache + SSM state) structures.
+
+The decode state is a nested dict of arrays so that name-based sharding rules
+and DéjàVuLib streaming can address leaves by path.  Layouts:
+
+dense / vlm        {"kv": {"k": [L,B,S,Hkv,Dh], "v": ...}}
+encdec             {"kv": ..., "cross": {"k": [L,B,Ssrc,Hkv,Dh], "v": ...}}
+ssm (mamba2)       {"conv": [L,B,K-1,conv_dim], "ssd": [L,B,nh,hd,N]}
+hybrid (hymba)     {"kv_swa":  {"k": [Lswa,B,M+W,Hkv,Dh], "v": ...},
+                    "kv_full": {"k": [Lfull,B,S,Hkv,Dh], "v": ...},
+                    "swa_pos": [M+W] int32 (absolute position per slot, -1=empty),
+                    "conv": [L,B,K-1,conv_dim], "ssd": [L,B,nh,hd,N]}
+
+The paper's "KV cache" generalizes to this *decode state* for attention-free
+and hybrid families (DESIGN.md §Arch-applicability): everything here is what
+must be swapped / streamed / replicated to resume generation.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Shape = Tuple[int, ...]
+
+
+def _conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def decode_state_shapes(cfg: ArchConfig, batch: int, seq_len: int) -> Dict:
+    """Nested dict of (shape, dtype_str) describing the decode state."""
+    d = {}
+    dt = cfg.dtype
+    L, hkv, dh = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.family in ("dense", "moe", "vlm"):
+        d["kv"] = {"k": ((L, batch, seq_len, hkv, dh), dt),
+                   "v": ((L, batch, seq_len, hkv, dh), dt)}
+    elif cfg.family == "encdec":
+        ssrc = min(cfg.max_source_len, seq_len)
+        d["kv"] = {"k": ((L, batch, seq_len, hkv, dh), dt),
+                   "v": ((L, batch, seq_len, hkv, dh), dt)}
+        d["cross"] = {"k": ((L, batch, ssrc, hkv, dh), dt),
+                      "v": ((L, batch, ssrc, hkv, dh), dt)}
+    elif cfg.family == "ssm":
+        d["conv"] = ((L, batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dt)
+        d["ssd"] = ((L, batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state), "float32")
+    elif cfg.family == "hybrid":
+        n_full = len(cfg.full_attn_layers)
+        n_swa = L - n_full
+        w = cfg.num_meta_tokens + min(cfg.sliding_window, seq_len + cfg.num_meta_tokens)
+        d["kv_swa"] = {"k": ((n_swa, batch, w, hkv, dh), dt),
+                       "v": ((n_swa, batch, w, hkv, dh), dt)}
+        full_len = seq_len + cfg.num_meta_tokens
+        d["kv_full"] = {"k": ((n_full, batch, full_len, hkv, dh), dt),
+                        "v": ((n_full, batch, full_len, hkv, dh), dt)}
+        d["swa_pos"] = ((w,), "int32")
+        d["conv"] = ((L, batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dt)
+        d["ssd"] = ((L, batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state), "float32")
+    else:
+        raise ValueError(cfg.family)
+    return d
+
+
+def _map_shapes(shapes, fn):
+    if isinstance(shapes, dict):
+        return {k: _map_shapes(v, fn) for k, v in shapes.items()}
+    shape, dtype = shapes
+    return fn(shape, dtype)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
+    shapes = decode_state_shapes(cfg, batch, seq_len)
+
+    def mk(shape, dtype):
+        if dtype == "int32":
+            return jnp.full(shape, -1, jnp.int32)
+        return jnp.zeros(shape, jnp.dtype(dtype))
+
+    return _map_shapes(shapes, mk)
+
+
+def decode_state_specs(cfg: ArchConfig, batch: int, seq_len: int):
+    """ShapeDtypeStruct stand-ins (no allocation) for dry-run lowering."""
+    shapes = decode_state_shapes(cfg, batch, seq_len)
+    return _map_shapes(shapes, lambda s, dt: jax.ShapeDtypeStruct(s, jnp.dtype(dt)))
+
+
+def state_bytes(state) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(state))

@@ -1,0 +1,465 @@
+"""input_specs() + step/layer functions for the compile-only dry-run.
+
+Everything here is ShapeDtypeStruct-based (weak-type-correct, shardable, no
+device allocation).  For each (arch × shape) cell we expose:
+
+  * the MAIN step (train_step / prefill / serve_step) with full shardings —
+    lowered + compiled for feasibility, memory analysis and the collective
+    schedule;
+  * per-layer correction functions — `jax.lax.scan` bodies are counted ONCE
+    by XLA cost analysis regardless of trip count (verified empirically), so
+    roofline totals are reconstructed as cost(step) + Σ (L−1)·cost(layer),
+    with each layer lowered as an L=1 scan under identical shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (batch_shardings, param_shardings,
+                                        state_shardings, _axes, _size)
+from repro.kvcache.cache import decode_state_shapes
+from repro.models import build_model
+from repro.training.train import TrainConfig, make_train_step
+from repro.training.optimizer import AdamWState
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patches
+        out = {"tokens": sds((b, s_text), "int32"),
+               "patch_embeds": sds((b, cfg.num_patches, cfg.d_model), "float32")}
+        tgt = s_text
+    elif cfg.family == "encdec":
+        ssrc = min(cfg.max_source_len, s)
+        out = {"tokens": sds((b, s), "int32"),
+               "src_embeds": sds((b, ssrc, cfg.d_model), "float32")}
+        tgt = s
+    elif cfg.family == "hybrid":
+        s_text = s - cfg.num_meta_tokens       # meta tokens fill the context
+        out = {"tokens": sds((b, s_text), "int32")}
+        tgt = s_text
+    else:
+        out = {"tokens": sds((b, s), "int32")}
+        tgt = s
+    if shape.kind == "train":
+        out["targets"] = sds((b, tgt), "int32")
+        out["loss_mask"] = sds((b, tgt), "float32")
+    return out
+
+
+def state_specs(cfg: ArchConfig, shape: ShapeConfig):
+    shapes = decode_state_shapes(cfg, shape.global_batch, shape.seq_len)
+
+    def mk(t):
+        if isinstance(t, dict):
+            return {k: mk(v) for k, v in t.items()}
+        sh, dt = t
+        return sds(sh, dt)
+    return mk(shapes)
+
+
+def params_specs(cfg: ArchConfig, model) -> Dict:
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig, model=None) -> Dict:
+    """All model inputs for this cell as ShapeDtypeStructs (assignment API)."""
+    model = model or build_model(arch)
+    out = {"params": params_specs(arch, model)}
+    if shape.kind == "train":
+        out["batch"] = batch_specs(arch, shape)
+        out["opt_state"] = jax.eval_shape(
+            lambda p: AdamWState(jnp.zeros((), jnp.int32),
+                                 jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                                 jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)),
+            out["params"])
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs(arch, shape)
+    else:  # decode
+        out["state"] = state_specs(arch, shape)
+        out["token"] = sds((shape.global_batch,), "int32")
+        out["pos"] = sds((), "int32")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step + layer functions per cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Lowerable:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: object          # pytree or None
+    multiplier: float = 1.0        # applied to cost when summing the roofline
+    donate: tuple = ()
+
+
+def _no_shard(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def make_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+              remat: bool = True, variant: str = "baseline") -> List[Lowerable]:
+    """The main step + layer-correction lowerables for one (arch × shape).
+
+    variant="opt" switches on the hillclimbed configuration: blocked (flash-
+    style) attention + explicit tensor/sequence-parallel activation
+    constraints (see distributed.sharding.activation_rules)."""
+    from repro.distributed.sharding import activation_rules
+    from repro.models.common import set_logical_rules
+    rules = activation_rules(mesh, variant, shape.kind)
+    pvariant = variant
+    if variant.startswith("opt") and cfg.is_moe and rules is not None:
+        # MoE: the sort-based dispatch gathers/scatters over ALL tokens;
+        # seq-sharded residuals and expert-sharded dispatch buffers both
+        # force whole-activation regathers per layer (measured 3-4x
+        # regression, EXPERIMENTS.md §Perf).  Keep the MoE block on the baseline GSPMD
+        # propagation; blocked attention + head sharding still apply.
+        rules = {**rules, "seq": None, "experts": None}
+    if variant.startswith("opt") and shape.kind == "decode":
+        # decode: the cache stays seq-sharded; GSPMD's partial-softmax over
+        # the sharded seq axis IS flash-decode split-K.  Forcing head
+        # sharding would re-shard the whole cache every step (measured 4x
+        # regression — §Perf), so attention constraints are dropped here.
+        if rules is not None:
+            rules = {**rules, "heads": None, "kv_heads": None}
+        if cfg.family == "ssm":
+            # tiny-batch decode is weight-traffic-bound: row-shard SSM weights
+            # (pure-SSM only: hymba's mixed attn+SSM layers regress — §Perf)
+            pvariant = "opt-rowssm"
+            if rules is not None:
+                rules = {**rules, "d_inner": None, "ssm_heads": None}
+        elif cfg.family == "hybrid":
+            # hymba decode: every constraint combination measured worse than
+            # GSPMD's own propagation (EXPERIMENTS.md §Perf) — keep the baseline config
+            rules = None
+            pvariant = "baseline"
+    set_logical_rules(rules)
+    # blocked (flash-style) attention pays off where scores would be S^2
+    # (prefill/train); decode keeps the einsum split-K form
+    backend = ("blocked" if variant.startswith("opt")
+               and shape.kind != "decode" else "xla")
+    model = build_model(cfg, backend=backend,
+                        remat=(remat and shape.kind == "train"))
+    p_specs = params_specs(cfg, model)
+    p_sh = param_shardings(p_specs, cfg, mesh, pvariant)
+    out: List[Lowerable] = []
+
+    if shape.kind == "train":
+        tstep = make_train_step(model, TrainConfig())
+        b_specs = batch_specs(cfg, shape)
+        b_sh = batch_shardings(b_specs, cfg, mesh)
+        o_specs = input_specs(cfg, shape, model)["opt_state"]
+        o_sh = param_shardings(o_specs, cfg, mesh)
+        out_shapes = jax.eval_shape(tstep, p_specs, o_specs, b_specs)
+        out_sh = (p_sh, o_sh, _no_shard(out_shapes[2], mesh))
+        out.append(Lowerable("train_step", tstep, (p_specs, o_specs, b_specs),
+                             (p_sh, o_sh, b_sh), out_sh))
+    elif shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_sh = batch_shardings(b_specs, cfg, mesh)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, max_len=shape.seq_len)
+
+        out_shapes = jax.eval_shape(prefill, p_specs, b_specs)
+        logits_sh = _logits_sharding(mesh, shape, cfg.vocab_size)
+        st_sh = state_shardings(out_shapes[1], cfg, mesh, shape.global_batch)
+        out.append(Lowerable("prefill", prefill, (p_specs, b_specs),
+                             (p_sh, b_sh), (logits_sh, st_sh, NamedSharding(mesh, P()))))
+    else:  # decode / serve_step
+        st_specs = state_specs(cfg, shape)
+        st_sh = state_shardings(st_specs, cfg, mesh, shape.global_batch)
+        tok = sds((shape.global_batch,), "int32")
+        tok_sh = batch_shardings(tok, cfg, mesh)
+        pos = sds((), "int32")
+
+        def serve_step(params, state, token, p):
+            return model.decode_step(params, state, token, p)
+
+        logits_sh = _logits_sharding(mesh, shape, cfg.vocab_size)
+        out.append(Lowerable("serve_step", serve_step,
+                             (p_specs, st_specs, tok, pos),
+                             (p_sh, st_sh, tok_sh, NamedSharding(mesh, P())),
+                             (logits_sh, st_sh), donate=(1,)))
+
+    out.extend(_layer_corrections(cfg, shape, mesh, model, p_specs, p_sh))
+    return out
+
+
+def _logits_sharding(mesh: Mesh, shape: ShapeConfig, vocab: int = 0):
+    dp, mp = _axes(mesh)
+    b = shape.global_batch
+    spec = [dp if b % _size(mesh, dp) == 0 else None,
+            mp if vocab % mesh.shape[mp] == 0 else None]
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# per-layer correction lowerables
+# ---------------------------------------------------------------------------
+
+def _slice1(tree, idx=0):
+    return jax.tree.map(lambda a: sds((1,) + tuple(a.shape[1:]), a.dtype), tree)
+
+
+def _layer_corrections(cfg, shape, mesh, model, p_specs, p_sh
+                       ) -> List[Lowerable]:
+    dp, mp = _axes(mesh)
+    b, s = shape.global_batch, shape.seq_len
+    dtype = cfg.dtype
+    dp_ok = b % _size(mesh, dp) == 0
+    x_spec = sds((b, s if shape.kind != "decode" else 1, cfg.d_model), dtype)
+    x_sh = NamedSharding(mesh, P(dp if dp_ok else None, None, None))
+    train = shape.kind == "train"
+    out: List[Lowerable] = []
+
+    def layers_sh(key="layers"):
+        return jax.tree.map(lambda x: x, p_sh[key])  # same tree
+
+    def l1(tree_key):
+        return _slice1(p_specs[tree_key]), jax.tree.map(lambda s_: s_, p_sh[tree_key])
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lp1, lp_sh = l1("layers")
+        if shape.kind == "decode":
+            L = cfg.num_layers
+            hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+            kc = sds((1, b, s, hkv, dh), dtype)
+            kv_sh = state_shardings({"kv": {"k": ((1, b, s, hkv, dh), dtype)}},
+                                    cfg, mesh, b)["kv"]["k"]
+
+            def dec_layer(lp, x, kc_, vc_):
+                kv_positions = jnp.arange(s, dtype=jnp.int32)
+
+                def body(x, xs):
+                    lp_, k_, v_ = xs
+                    x, (k_, v_), _ = model._layer(
+                        x, lp_, mode="decode", kc=k_, vc=v_,
+                        kv_positions=kv_positions, pos=jnp.int32(s - 1))
+                    return x, (k_, v_)
+                x, _ = jax.lax.scan(body, x, (lp, kc_, vc_))
+                return x
+
+            out.append(Lowerable("layer", dec_layer, (lp1, x_spec, kc, kc),
+                                 (lp_sh, x_sh, kv_sh, kv_sh), None,
+                                 multiplier=cfg.num_layers - 1))
+        else:
+            def fwd(lp, x):
+                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+                def body(x, lp_):
+                    x, _, _ = model._layer(x, lp_, mode="prefill",
+                                           positions=positions,
+                                           collect_aux=False)
+                    return x, None
+                if train and model.remat:
+                    body = jax.checkpoint(body)
+                x, _ = jax.lax.scan(body, x, lp)
+                return x
+
+            fn = (lambda lp, x: jax.grad(lambda l_, x_: jnp.sum(
+                fwd(l_, x_).astype(jnp.float32)))(lp, x)) if train else fwd
+            out.append(Lowerable("layer", fn, (lp1, x_spec), (lp_sh, x_sh),
+                                 None, multiplier=cfg.num_layers - 1))
+
+    elif cfg.family == "ssm":
+        from repro.models import ssm as ssm_mod
+        from repro.models.common import norm_apply
+        lp1, lp_sh = l1("layers")
+        if shape.kind == "decode":
+            st = decode_state_shapes(cfg, b, s)
+            conv1 = sds((1,) + st["conv"][0][1:], st["conv"][1])
+            ssd1 = sds((1,) + st["ssd"][0][1:], st["ssd"][1])
+            stsh = state_shardings({"conv": ((1,) + st["conv"][0][1:], st["conv"][1]),
+                                    "ssd": ((1,) + st["ssd"][0][1:], st["ssd"][1])},
+                                   cfg, mesh, b)
+
+            def dec_layer(lp, x, conv, ssd_st):
+                def body(x, xs):
+                    lp_, c_, h_ = xs
+                    hin = norm_apply(cfg.norm, x, lp_["ln"])
+                    o, h_, c_ = ssm_mod.ssm_decode(hin, lp_["ssm"], cfg, h_, c_)
+                    return x + o, (c_, h_)
+                x, _ = jax.lax.scan(body, x, (lp, conv, ssd_st))
+                return x
+
+            out.append(Lowerable("layer", dec_layer, (lp1, x_spec, conv1, ssd1),
+                                 (lp_sh, x_sh, stsh["conv"], stsh["ssd"]), None,
+                                 multiplier=cfg.num_layers - 1))
+        else:
+            def fwd(lp, x):
+                def body(x, lp_):
+                    hin = norm_apply(cfg.norm, x, lp_["ln"])
+                    o, _, _ = ssm_mod.ssm_prefill(hin, lp_["ssm"], cfg)
+                    return x + o, None
+                if train and model.remat:
+                    body = jax.checkpoint(body)
+                x, _ = jax.lax.scan(body, x, lp)
+                return x
+
+            fn = (lambda lp, x: jax.grad(lambda l_, x_: jnp.sum(
+                fwd(l_, x_).astype(jnp.float32)))(lp, x)) if train else fwd
+            out.append(Lowerable("layer", fn, (lp1, x_spec), (lp_sh, x_sh),
+                                 None, multiplier=cfg.num_layers - 1))
+
+    elif cfg.family == "hybrid":
+        lp1, lp_sh = l1("layers")
+        n_swa = cfg.num_layers - len(cfg.full_attn_layers)
+        n_scans = sum(1 for seg in model.segs if seg[0] == "swa")
+        st_len = s  # total context (meta included via shape semantics)
+        if shape.kind == "decode":
+            hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+            m, w = cfg.num_meta_tokens, cfg.sliding_window
+            st = decode_state_shapes(cfg, b, s)
+            kswa1 = sds((1,) + st["kv_swa"]["k"][0][1:], dtype)
+            conv1 = sds((1,) + st["conv"][0][1:], st["conv"][1])
+            ssd1 = sds((1,) + st["ssd"][0][1:], st["ssd"][1])
+            stsh = state_shardings(
+                {"kv_swa": {"k": ((1,) + st["kv_swa"]["k"][0][1:], dtype)},
+                 "conv": ((1,) + st["conv"][0][1:], st["conv"][1]),
+                 "ssd": ((1,) + st["ssd"][0][1:], st["ssd"][1])}, cfg, mesh, b)
+
+            def swa_dec(lp, x, kc, vc, conv, ssd_st):
+                swa_pos = jnp.arange(kswa1.shape[2], dtype=jnp.int32)
+
+                def body(x, xs):
+                    lp_, k_, v_, c_, h_ = xs
+                    from repro.models.common import norm_apply, rmsnorm
+                    from repro.models import attention as attn_mod, ssm as ssm_mod
+                    from repro.models.mlp import mlp_apply
+                    h = norm_apply(cfg.norm, x, lp_["ln1"])
+                    a, k_, v_ = attn_mod.attention_decode(
+                        h, lp_["attn"], cfg, k_, v_, swa_pos, jnp.int32(st_len - 1),
+                        window=w, num_meta=m, write_index=jnp.int32(m))
+                    so, h_, c_ = ssm_mod.ssm_decode(h, lp_["ssm"], cfg, h_, c_)
+                    x = x + 0.5 * (rmsnorm(a, lp_["fuse_na"]) + rmsnorm(so, lp_["fuse_ns"]))
+                    x = x + mlp_apply(norm_apply(cfg.norm, x, lp_["ln2"]), lp_["mlp"], cfg)
+                    return x, (k_, v_, c_, h_)
+                x, _ = jax.lax.scan(body, x, (lp, kc, vc, conv, ssd_st))
+                return x
+
+            out.append(Lowerable("swa_layer", swa_dec,
+                                 (lp1, x_spec, kswa1, kswa1, conv1, ssd1),
+                                 (lp_sh, x_sh, stsh["kv_swa"]["k"], stsh["kv_swa"]["k"],
+                                  stsh["conv"], stsh["ssd"]), None,
+                                 multiplier=n_swa - n_scans))
+        else:
+            def swa_fwd(lp, x):
+                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+                def body(x, lp_):
+                    x, _, _, _, _ = model._layer_parallel(x, lp_, positions,
+                                                          window=cfg.sliding_window)
+                    return x, None
+                if train and model.remat:
+                    body = jax.checkpoint(body)
+                x, _ = jax.lax.scan(body, x, lp)
+                return x
+
+            fn = (lambda lp, x: jax.grad(lambda l_, x_: jnp.sum(
+                swa_fwd(l_, x_).astype(jnp.float32)))(lp, x)) if train else swa_fwd
+            out.append(Lowerable("swa_layer", fn, (lp1, x_spec), (lp_sh, x_sh),
+                                 None, multiplier=n_swa - n_scans))
+
+    elif cfg.family == "encdec":
+        from repro.models.common import norm_apply
+        from repro.models import attention as attn_mod
+        from repro.models.mlp import mlp_apply
+        ssrc = min(cfg.max_source_len, s)
+        enc1, enc_sh = l1("enc_layers")
+        dec1, dec_sh = l1("dec_layers")
+        xe_spec = sds((b, ssrc, cfg.d_model), dtype)
+        xe_sh = x_sh
+        if shape.kind == "decode":
+            hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+            kc = sds((1, b, s, hkv, dh), dtype)
+            ck = sds((1, b, ssrc, hkv, dh), dtype)
+            kv_sh = state_shardings({"kv": {"k": ((1, b, s, hkv, dh), dtype)}},
+                                    cfg, mesh, b)["kv"]["k"]
+            ck_sh = state_shardings({"cross": {"k": ((1, b, ssrc, hkv, dh), dtype)}},
+                                    cfg, mesh, b)["cross"]["k"]
+
+            def dec_layer(lp, x, kc_, vc_, ck_, cv_):
+                kv_positions = jnp.arange(s, dtype=jnp.int32)
+
+                def body(x, xs):
+                    lp_, k_, v_, c1, c2 = xs
+                    h = norm_apply(cfg.norm, x, lp_["ln1"])
+                    a, k_, v_ = attn_mod.attention_decode(
+                        h, lp_["attn"], cfg, k_, v_, kv_positions,
+                        jnp.int32(s - 1), rope=False)
+                    x = x + a
+                    h = norm_apply(cfg.norm, x, lp_["lnx"])
+                    x = x + attn_mod.cross_attention(h, lp_["cross"], cfg, c1, c2)
+                    x = x + mlp_apply(norm_apply(cfg.norm, x, lp_["ln2"]), lp_["mlp"], cfg)
+                    return x, None
+                x, _ = jax.lax.scan(body, x, (lp, kc_, vc_, ck_, cv_))
+                return x
+
+            out.append(Lowerable("dec_layer", dec_layer,
+                                 (dec1, x_spec, kc, kc, ck, ck),
+                                 (dec_sh, x_sh, kv_sh, kv_sh, ck_sh, ck_sh), None,
+                                 multiplier=cfg.num_layers - 1))
+        else:
+            def enc_fwd(lp, x):
+                def body(x, lp_):
+                    h = norm_apply(cfg.norm, x, lp_["ln1"])
+                    q, k, v = attn_mod.qkv_proj(h, lp_["attn"], cfg)
+                    o = attn_mod.attend(q, k, v, mask=None)
+                    x = x + attn_mod.out_proj(o, lp_["attn"])
+                    x = x + mlp_apply(norm_apply(cfg.norm, x, lp_["ln2"]), lp_["mlp"], cfg)
+                    return x, None
+                if train and model.remat:
+                    body = jax.checkpoint(body)
+                x, _ = jax.lax.scan(body, x, lp)
+                return x
+
+            def dec_fwd(lp, xe_and_x):
+                xe, x = xe_and_x
+                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+                def body(x, lp_):
+                    h = norm_apply(cfg.norm, x, lp_["ln1"])
+                    a, _, _ = attn_mod.attention_prefill(h, lp_["attn"], cfg,
+                                                         positions, rope=False)
+                    x = x + a
+                    h = norm_apply(cfg.norm, x, lp_["lnx"])
+                    ck_, cv_ = attn_mod.cross_kv(xe, lp_["cross"], cfg)
+                    x = x + attn_mod.cross_attention(h, lp_["cross"], cfg, ck_, cv_)
+                    x = x + mlp_apply(norm_apply(cfg.norm, x, lp_["ln2"]), lp_["mlp"], cfg)
+                    return x, None
+                if train and model.remat:
+                    body = jax.checkpoint(body)
+                x, _ = jax.lax.scan(body, x, lp)
+                return x
+
+            efn = (lambda lp, x: jax.grad(lambda l_, x_: jnp.sum(
+                enc_fwd(l_, x_).astype(jnp.float32)))(lp, x)) if train else enc_fwd
+            dfn = (lambda lp, xx: jax.grad(lambda l_, x_: jnp.sum(
+                dec_fwd(l_, x_).astype(jnp.float32)))(lp, xx)) if train else dec_fwd
+            out.append(Lowerable("enc_layer", efn, (enc1, xe_spec), (enc_sh, xe_sh),
+                                 None, multiplier=cfg.num_encoder_layers - 1))
+            out.append(Lowerable("dec_layer", dfn, (dec1, (xe_spec, x_spec)),
+                                 (dec_sh, (xe_sh, x_sh)), None,
+                                 multiplier=cfg.num_layers - 1))
+    return out

@@ -1,0 +1,250 @@
+"""GQA attention: projections, masking variants, XLA and Pallas backends.
+
+Masking is position-based so the same code serves full-causal, sliding-window
+(+ always-visible meta tokens, Hymba-style), cross-attention (no mask), and
+single-token decode against a partially-filled cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, logical_constraint, split_keys
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    kq, kk, kv, ko = split_keys(key, 4)
+    return {
+        "wq": dense_init(kq, (d, qd), dtype),
+        "wk": dense_init(kk, (d, kvd), dtype),
+        "wv": dense_init(kv, (d, kvd), dtype),
+        "wo": dense_init(ko, (qd, d), dtype),
+    }
+
+
+def qkv_proj(x, p, cfg):
+    """x: [B,S,d] -> q [B,S,Hq,Dh], k/v [B,S,Hkv,Dh]."""
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, dh)
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, dh)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "kv_heads", None)
+    v = logical_constraint(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def out_proj(o, p):
+    b, s, h, dh = o.shape
+    return o.reshape(b, s, h * dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Mask construction (position-based)
+# ---------------------------------------------------------------------------
+
+def build_mask(q_pos, kv_pos, *, causal: bool, window: int = 0, num_meta: int = 0):
+    """Boolean mask [.., Sq, Skv]; True = attend.
+
+    q_pos: [Sq] or [B,Sq]; kv_pos: [Skv] or [B,Skv] int32 (−1 = empty slot).
+    Meta tokens occupy positions [0, num_meta) and are always visible.
+    Window (if >0) permits kv within the last `window` positions of q.
+    """
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = kv_pos[..., None, :].astype(jnp.int32)
+    mask = kp >= 0
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        in_window = kp > qp - window
+        is_meta = kp < num_meta
+        mask &= in_window | is_meta
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Core attention (XLA backend; GSPMD-shardable)
+# ---------------------------------------------------------------------------
+
+def attend(q, k, v, mask=None, bias=None, backend: str = "xla"):
+    """q: [B,Sq,Hq,Dh], k/v: [B,Skv,Hkv,Dh], mask: [.., Sq,Skv] bool.
+
+    GQA: Hq = G * Hkv.  Softmax in f32.  bias: [Hq,Sq,Skv] f32 additive
+    (e.g. ALiBi), added to scores before masking.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.attention_auto(q, k, v, mask=mask, bias=bias)
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias.reshape(hkv, g, *bias.shape[1:])[None]
+    if mask is not None:
+        m = mask[..., None, None, :, :] if mask.ndim == 2 else mask[:, None, None]
+        scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def alibi_bias(slopes, q_pos, kv_pos):
+    """ALiBi additive bias [Hq,Sq,Skv] from absolute positions."""
+    dist = (q_pos[:, None] - kv_pos[None, :]).astype(jnp.float32)
+    return -slopes[:, None, None] * jnp.maximum(dist, 0.0)
+
+
+def attend_blocked(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                   window: int = 0, num_meta: int = 0, alibi=None,
+                   block_q: int = 512, block_k: int = 1024):
+    """Flash-style blocked attention in pure XLA (hillclimb optimization).
+
+    Never materializes the [Sq,Skv] score matrix: a `lax.map` over Q blocks
+    runs an online-softmax `lax.scan` over KV blocks with a small
+    (bq-sized) carry, cutting HBM traffic from O(S²) to O(S·d) — the same
+    schedule the Pallas flash kernel executes on TPU, expressed so GSPMD can
+    shard it (batch over data, heads over model).
+    """
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    pq, pk = (-sq) % bq, (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    qpos = jnp.pad(q_pos, (0, pq), constant_values=-1) if pq else q_pos
+    kpos = jnp.pad(kv_pos, (0, pk), constant_values=-1) if pk else kv_pos
+    nq, nk = (sq + pq) // bq, (skv + pk) // bk
+    scale = dh ** -0.5
+    kb = kp.reshape(b, nk, bk, hkv, dh)
+    vb = vp.reshape(b, nk, bk, hkv, dh)
+    kposb = kpos.reshape(nk, bk)
+
+    def one_q_block(args):
+        qblk, qposb = args                          # [b,bq,hq,dh], [bq]
+        qg = qblk.reshape(b, bq, hkv, g, dh).astype(jnp.float32) * scale
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kblk, vblk, kpb = xs                    # [b,bk,hkv,dh], [bk]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk.astype(jnp.float32))
+            if alibi is not None:
+                dist = (qposb[:, None] - kpb[None, :]).astype(jnp.float32)
+                bias = -alibi.reshape(hkv, g)[:, :, None, None] * \
+                    jnp.maximum(dist, 0.0)[None, None]
+                s = s + bias
+            valid = kpb >= 0
+            if causal:
+                valid = valid[None, :] & (kpb[None, :] <= qposb[:, None])
+            else:
+                valid = jnp.broadcast_to(valid[None, :], (bq, bk))
+            if window > 0:
+                in_w = kpb[None, :] > qposb[:, None] - window
+                valid = valid & (in_w | (kpb < num_meta)[None, :])
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, hkv, g, bq), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, bq), jnp.float32),
+                jnp.zeros((b, hkv, g, bq, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kposb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # [b,hkv,g,bq,dh]
+        return jnp.moveaxis(out, 3, 1).reshape(b, bq, hq, dh).astype(q.dtype)
+
+    qblocks = jnp.moveaxis(qp.reshape(b, nq, bq, hq, dh), 1, 0)
+    out = jax.lax.map(one_q_block, (qblocks, qpos.reshape(nq, bq)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq + pq, hq, dh)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# High-level ops used by the models
+# ---------------------------------------------------------------------------
+
+def attention_prefill(x, p, cfg, positions, *, window: int = 0, num_meta: int = 0,
+                      rope: bool = True, alibi=None, backend: str = "xla"):
+    """Causal self-attention over a full prompt.  Returns (out, k, v)."""
+    q, k, v = qkv_proj(x, p, cfg)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if backend == "blocked":
+        o = attend_blocked(q, k, v, positions, positions, causal=True,
+                           window=window, num_meta=num_meta, alibi=alibi)
+        return out_proj(o, p), k, v
+    mask = build_mask(positions, positions, causal=True, window=window, num_meta=num_meta)
+    bias = alibi_bias(alibi, positions, positions) if alibi is not None else None
+    o = attend(q, k, v, mask=mask, bias=bias, backend=backend)
+    return out_proj(o, p), k, v
+
+
+def attention_decode(x, p, cfg, k_cache, v_cache, kv_positions, pos, *,
+                     window: int = 0, num_meta: int = 0, rope: bool = True,
+                     alibi=None, write_index=None, backend: str = "xla"):
+    """One-token decode. x: [B,1,d]; cache: [B,S,Hkv,Dh]; pos: scalar int32.
+
+    write_index: where to write the new token's K/V (defaults to pos;
+    ring-buffer caches pass their slot).  Returns (out, k_cache, v_cache).
+    """
+    q, k_new, v_new = qkv_proj(x, p, cfg)
+    if rope:
+        posv = jnp.full((1,), 0, jnp.int32) + pos
+        q = apply_rope(q, posv[None, :], cfg.rope_theta)
+        k_new = apply_rope(k_new, posv[None, :], cfg.rope_theta)
+    wi = pos if write_index is None else write_index
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), wi, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), wi, axis=1)
+    q_pos = jnp.full((1,), 0, jnp.int32) + pos
+    if backend == "blocked":
+        o = attend_blocked(q, k_cache, v_cache, q_pos, kv_positions,
+                           causal=True, window=window, num_meta=num_meta,
+                           alibi=alibi)
+        return out_proj(o, p), k_cache, v_cache
+    mask = build_mask(q_pos, kv_positions, causal=True, window=window, num_meta=num_meta)
+    bias = alibi_bias(alibi, q_pos, jnp.maximum(kv_positions, 0)) if alibi is not None else None
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.decode_attention_auto(q, k_cache, v_cache, mask)
+    else:
+        o = attend(q, k_cache, v_cache, mask=mask, bias=bias)
+    return out_proj(o, p), k_cache, v_cache
+
+
+def cross_attention(x, p, cfg, k_cache, v_cache, backend: str = "xla"):
+    """Decoder→encoder cross attention (no mask, no rope)."""
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, dh)
+    o = attend(q, k_cache, v_cache, mask=None, backend=backend)
+    return out_proj(o, p)
+
+
+def cross_kv(enc_out, p, cfg):
+    """Compute cross-attention K/V once from encoder output."""
+    b, s, _ = enc_out.shape
+    dh = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(b, s, cfg.num_kv_heads, dh)
+    v = (enc_out @ p["wv"]).reshape(b, s, cfg.num_kv_heads, dh)
+    return k, v

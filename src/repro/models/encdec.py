@@ -1,0 +1,155 @@
+"""Encoder-decoder backbone (SeamlessM4T family).
+
+The modality frontend is a STUB: callers supply precomputed frame embeddings
+``src_embeds [B, S_src, d_model]``.  The encoder is stateless (bidirectional);
+the decoder carries a causal self-attention KV cache plus per-request
+cross-attention K/V computed once from the encoder output — both belong to
+the DéjàVu decode state (the cross-KV streams with the prompt cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.common import embed_init, norm_apply, norm_init, split_keys
+from repro.models.losses import causal_lm_loss
+from repro.models.mlp import mlp_apply, mlp_init
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, backend: str = "xla", remat: bool = False):
+        self.cfg = cfg
+        self.backend = backend
+        self.remat = remat
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        kE, kSP, kDP, kEL, kDL, kH = split_keys(key, 6)
+        p = {
+            "embed": embed_init(kE, (cfg.vocab_size, cfg.d_model), dtype),
+            "src_pos": embed_init(kSP, (cfg.max_source_len, cfg.d_model), dtype),
+            "pos_table": embed_init(kDP, (cfg.max_seq_len, cfg.d_model), dtype),
+        }
+
+        def enc_layer(k):
+            k1, k2 = split_keys(k, 2)
+            return {"ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "attn": attn.attn_init(k1, cfg, dtype),
+                    "ln2": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "mlp": mlp_init(k2, cfg, dtype)}
+
+        def dec_layer(k):
+            k1, k2, k3 = split_keys(k, 3)
+            return {"ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "attn": attn.attn_init(k1, cfg, dtype),
+                    "lnx": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "cross": attn.attn_init(k2, cfg, dtype),
+                    "ln2": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "mlp": mlp_init(k3, cfg, dtype)}
+
+        p["enc_layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[enc_layer(k) for k in split_keys(kEL, cfg.num_encoder_layers)])
+        p["dec_layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[dec_layer(k) for k in split_keys(kDL, cfg.num_layers)])
+        p["enc_final"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["final_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["lm_head"] = embed_init(kH, (cfg.d_model, cfg.vocab_size), dtype)
+        return p
+
+    # ------------------------------------------------------------------
+    def encode(self, params, src_embeds):
+        cfg = self.cfg
+        s = src_embeds.shape[1]
+        x = src_embeds.astype(jnp.dtype(cfg.dtype)) + params["src_pos"][None, :s]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(x, lp):
+            h = norm_apply(cfg.norm, x, lp["ln1"])
+            q, k, v = attn.qkv_proj(h, lp["attn"], cfg)
+            o = attn.attend(q, k, v, mask=None, backend=self.backend)  # bidirectional
+            x = x + attn.out_proj(o, lp["attn"])
+            x = x + mlp_apply(norm_apply(cfg.norm, x, lp["ln2"]), lp["mlp"], cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return norm_apply(cfg.norm, x, params["enc_final"])
+
+    # ------------------------------------------------------------------
+    def _decoder(self, params, tokens, enc_out, collect: bool):
+        cfg = self.cfg
+        s = tokens.shape[1]
+        x = jnp.take(params["embed"], tokens, axis=0) + params["pos_table"][None, :s]
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+        def body(x, lp):
+            h = norm_apply(cfg.norm, x, lp["ln1"])
+            a, k, v = attn.attention_prefill(h, lp["attn"], cfg, positions,
+                                             rope=False, backend=self.backend)
+            x = x + a
+            h = norm_apply(cfg.norm, x, lp["lnx"])
+            ck, cv = attn.cross_kv(enc_out, lp["cross"], cfg)
+            x = x + attn.cross_attention(h, lp["cross"], cfg, ck, cv, backend=self.backend)
+            x = x + mlp_apply(norm_apply(cfg.norm, x, lp["ln2"]), lp["mlp"], cfg)
+            return x, (k, v, ck, cv) if collect else None
+
+        if self.remat and not collect:
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, params["dec_layers"])
+        x = norm_apply(cfg.norm, x, params["final_norm"])
+        return x, ys
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["src_embeds"])
+        x, _ = self._decoder(params, batch["tokens"], enc_out, collect=False)
+        logits = x @ params["lm_head"]
+        return causal_lm_loss(logits, batch["targets"], batch["loss_mask"])
+
+    def prefill(self, params, batch, max_len=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        enc_out = self.encode(params, batch["src_embeds"])
+        x, (ks, vs, cks, cvs) = self._decoder(params, tokens, enc_out, collect=True)
+        logits = (x[:, -1:, :] @ params["lm_head"])[:, 0]
+        max_len = max_len or s
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        kc = jnp.zeros((cfg.num_layers, b, max_len, hkv, dh), ks.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, ks, 0, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vs, 0, axis=2)
+        state = {"kv": {"k": kc, "v": vc}, "cross": {"k": cks, "v": cvs}}
+        return logits, state, jnp.int32(s)
+
+    def decode_step(self, params, state, token, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_table"], pos, 1, axis=0)[None]
+        s_cache = state["kv"]["k"].shape[2]
+        kv_positions = jnp.arange(s_cache, dtype=jnp.int32)
+        kv_positions = jnp.where(kv_positions <= pos, kv_positions, -1)
+
+        def body(x, xs):
+            lp, kc, vc, ck, cv = xs
+            h = norm_apply(cfg.norm, x, lp["ln1"])
+            a, kc, vc = attn.attention_decode(h, lp["attn"], cfg, kc, vc,
+                                              kv_positions, pos, rope=False,
+                                              backend=self.backend)
+            x = x + a
+            h = norm_apply(cfg.norm, x, lp["lnx"])
+            x = x + attn.cross_attention(h, lp["cross"], cfg, ck, cv, backend=self.backend)
+            x = x + mlp_apply(norm_apply(cfg.norm, x, lp["ln2"]), lp["mlp"], cfg)
+            return x, (kc, vc)
+
+        x, (kcs, vcs) = jax.lax.scan(
+            body, x, (params["dec_layers"], state["kv"]["k"], state["kv"]["v"],
+                      state["cross"]["k"], state["cross"]["v"]))
+        x = norm_apply(cfg.norm, x, params["final_norm"])
+        logits = (x @ params["lm_head"])[:, 0]
+        return logits, {"kv": {"k": kcs, "v": vcs}, "cross": state["cross"]}

@@ -1,0 +1,252 @@
+"""Hymba-style hybrid LM: parallel attention + Mamba heads per layer.
+
+Every layer runs attention and an SSD block in PARALLEL on the same normed
+input; their rms-normalized outputs are mean-fused.  Most layers use
+sliding-window attention (ring-buffer KV cache of size window+meta) while
+``full_attn_layers`` use global attention.  ``num_meta_tokens`` learnable meta
+tokens are prepended and remain attendable from every window (Hymba §3).
+
+Layer stacks are scanned per contiguous SWA segment; the few global layers run
+unrolled.  Decode state (see kvcache/cache.py):
+  kv_swa [Lswa,B,M+W,Hkv,Dh] ring, kv_full [Lfull,B,M+S,Hkv,Dh],
+  swa_pos [M+W] absolute positions per slot, conv + ssd states for all layers.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.common import embed_init, norm_apply, norm_init, rmsnorm, split_keys
+from repro.models.losses import causal_lm_loss
+from repro.models.mlp import mlp_apply, mlp_init
+
+
+def _segments(cfg: ArchConfig):
+    """[('full', layer_idx, full_idx) | ('swa', start, stop, swa_start)]"""
+    full = set(cfg.full_attn_layers)
+    segs, i, swa_count, full_count = [], 0, 0, 0
+    while i < cfg.num_layers:
+        if i in full:
+            segs.append(("full", i, full_count))
+            full_count += 1
+            i += 1
+        else:
+            j = i
+            while j < cfg.num_layers and j not in full:
+                j += 1
+            segs.append(("swa", i, j, swa_count))
+            swa_count += j - i
+            i = j
+    return segs
+
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig, backend: str = "xla", remat: bool = False):
+        self.cfg = cfg
+        self.backend = backend
+        self.remat = remat
+        self.segs = _segments(cfg)
+        self.n_full = len(cfg.full_attn_layers)
+        self.n_swa = cfg.num_layers - self.n_full
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        kE, kM, kL, kH = split_keys(key, 4)
+        p = {"embed": embed_init(kE, (cfg.vocab_size, cfg.d_model), dtype),
+             "meta": embed_init(kM, (cfg.num_meta_tokens, cfg.d_model), dtype)}
+
+        def one_layer(k):
+            k1, k2, k3 = split_keys(k, 3)
+            return {"ln1": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "attn": attn.attn_init(k1, cfg, dtype),
+                    "ssm": ssm.ssm_init(k2, cfg, dtype),
+                    "fuse_na": jnp.zeros((cfg.d_model,), dtype),
+                    "fuse_ns": jnp.zeros((cfg.d_model,), dtype),
+                    "ln2": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "mlp": mlp_init(k3, cfg, dtype)}
+
+        keys = split_keys(kL, cfg.num_layers)
+        p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[one_layer(k) for k in keys])
+        p["final_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(kH, (cfg.d_model, cfg.vocab_size), dtype)
+        return p
+
+    def _unembed(self, params, x):
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        return x @ head
+
+    # ------------------------------------------------------------------
+    def _layer_parallel(self, x, lp, positions, window, conv0=None, h0=None):
+        """Full-sequence layer: returns (x, k, v, ssd_state, conv_state)."""
+        cfg = self.cfg
+        h = norm_apply(cfg.norm, x, lp["ln1"])
+        a_out, k, v = attn.attention_prefill(
+            h, lp["attn"], cfg, positions, window=window,
+            num_meta=cfg.num_meta_tokens, backend=self.backend)
+        s_out, hfin, conv = ssm.ssm_prefill(h, lp["ssm"], cfg, h0=h0, conv0=conv0,
+                                            backend=self.backend)
+        fused = 0.5 * (rmsnorm(a_out, lp["fuse_na"]) + rmsnorm(s_out, lp["fuse_ns"]))
+        x = x + fused
+        x = x + mlp_apply(norm_apply(cfg.norm, x, lp["ln2"]), lp["mlp"], cfg)
+        return x, k, v, hfin, conv
+
+    def _forward(self, params, tokens, collect: bool):
+        """Full-sequence forward.  Returns (x, cache_parts or None)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        m = cfg.num_meta_tokens
+        x = jnp.take(params["embed"], tokens, axis=0)
+        meta = jnp.broadcast_to(params["meta"][None], (b, m, cfg.d_model)).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+        st = m + s
+        positions = jnp.arange(st, dtype=jnp.int32)
+        w = cfg.sliding_window
+
+        # ring-slot gather indices for the SWA cache (static, numpy)
+        ring = np.full((m + w,), -1, np.int64)
+        ring[:m] = np.arange(m)
+        for p_abs in range(max(m, st - w), st):
+            ring[m + (p_abs - m) % w] = p_abs
+        valid = ring >= 0
+        gather_idx = np.where(valid, ring, 0)
+
+        ks_full, vs_full, ks_swa, vs_swa = [], [], [], []
+        convs, ssds = [None] * cfg.num_layers, [None] * cfg.num_layers
+
+        for seg in self.segs:
+            if seg[0] == "full":
+                _, li, _ = seg
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                x, k, v, hfin, conv = self._layer_parallel(x, lp, positions, window=0)
+                if collect:
+                    ks_full.append(k); vs_full.append(v)
+                    convs[li], ssds[li] = conv, hfin
+            else:
+                _, lo, hi, _ = seg
+                lps = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+                def body(x, lp):
+                    x, k, v, hfin, conv = self._layer_parallel(x, lp, positions, window=w)
+                    kw = jnp.take(k, gather_idx, axis=1) * valid[None, :, None, None]
+                    vw = jnp.take(v, gather_idx, axis=1) * valid[None, :, None, None]
+                    return x, (kw, vw, hfin, conv)
+
+                if self.remat and not collect:
+                    body = jax.checkpoint(body)
+                x, (kw, vw, hf, cv) = jax.lax.scan(body, x, lps)
+                if collect:
+                    ks_swa.append(kw); vs_swa.append(vw)
+                    for off in range(hi - lo):
+                        convs[lo + off] = jax.tree.map(lambda a: a[off], cv)
+                        ssds[lo + off] = jax.tree.map(lambda a: a[off], hf)
+
+        x = norm_apply(cfg.norm, x, params["final_norm"])
+        if not collect:
+            return x, None
+        cache = {
+            "kv_full": {"k": jnp.stack(ks_full), "v": jnp.stack(vs_full)},
+            "kv_swa": {"k": jnp.concatenate(ks_swa), "v": jnp.concatenate(vs_swa)},
+            "swa_pos": jnp.asarray(ring, jnp.int32),
+            "conv": jnp.stack(convs),
+            "ssd": jnp.stack(ssds),
+        }
+        return x, cache
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch):
+        x, _ = self._forward(params, batch["tokens"], collect=False)
+        x = x[:, self.cfg.num_meta_tokens:]
+        logits = self._unembed(params, x)
+        return causal_lm_loss(logits, batch["targets"], batch["loss_mask"])
+
+    def prefill(self, params, batch, max_len=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        x, cache = self._forward(params, tokens, collect=True)
+        logits = self._unembed(params, x[:, -1:, :])[:, 0]
+        cur = cfg.num_meta_tokens + s
+        if max_len is not None and max_len > cur:  # grow full-attn cache (total slots)
+            pad = max_len - cur
+            for kk in ("k", "v"):
+                arr = cache["kv_full"][kk]
+                cache["kv_full"][kk] = jnp.pad(arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, cache, jnp.int32(cur)
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params, state, token, pos):
+        """pos: absolute position (meta offset included) of the new token."""
+        cfg = self.cfg
+        m, w = cfg.num_meta_tokens, cfg.sliding_window
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+
+        slot = m + jnp.remainder(pos - m, w)
+        swa_pos = state["swa_pos"].at[slot].set(pos)
+        full_len = state["kv_full"]["k"].shape[2]
+        full_pos = jnp.arange(full_len, dtype=jnp.int32)
+        full_pos = jnp.where(full_pos <= pos, full_pos, -1)
+
+        new_full_k, new_full_v = [None] * self.n_full, [None] * self.n_full
+        new_swa_k, new_swa_v = [], []
+        new_conv, new_ssd = [None] * cfg.num_layers, [None] * cfg.num_layers
+
+        def one(x, lp, kc, vc, conv, ssd_st, window, kv_positions, write_index):
+            h = norm_apply(cfg.norm, x, lp["ln1"])
+            a_out, kc, vc = attn.attention_decode(
+                h, lp["attn"], cfg, kc, vc, kv_positions, pos,
+                window=window, num_meta=m, write_index=write_index,
+                backend=self.backend)
+            s_out, ssd_st, conv = ssm.ssm_decode(h, lp["ssm"], cfg, ssd_st, conv)
+            fused = 0.5 * (rmsnorm(a_out, lp["fuse_na"]) + rmsnorm(s_out, lp["fuse_ns"]))
+            x = x + fused
+            x = x + mlp_apply(norm_apply(cfg.norm, x, lp["ln2"]), lp["mlp"], cfg)
+            return x, kc, vc, conv, ssd_st
+
+        for seg in self.segs:
+            if seg[0] == "full":
+                _, li, fi = seg
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                kc = state["kv_full"]["k"][fi]
+                vc = state["kv_full"]["v"][fi]
+                x, kc, vc, conv, sst = one(x, lp, kc, vc, state["conv"][li],
+                                           state["ssd"][li], 0, full_pos, pos)
+                new_full_k[fi], new_full_v[fi] = kc, vc
+                new_conv[li], new_ssd[li] = conv, sst
+            else:
+                _, lo, hi, so = seg
+                n = hi - lo
+                lps = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+                kcs = state["kv_swa"]["k"][so:so + n]
+                vcs = state["kv_swa"]["v"][so:so + n]
+                convs = state["conv"][lo:hi]
+                ssds = state["ssd"][lo:hi]
+
+                def body(x, xs):
+                    lp, kc, vc, conv, sst = xs
+                    x, kc, vc, conv, sst = one(x, lp, kc, vc, conv, sst,
+                                               w, swa_pos, slot)
+                    return x, (kc, vc, conv, sst)
+
+                x, (kcs, vcs, convs, ssds) = jax.lax.scan(body, x, (lps, kcs, vcs, convs, ssds))
+                new_swa_k.append(kcs); new_swa_v.append(vcs)
+                for off in range(n):
+                    new_conv[lo + off] = jax.tree.map(lambda a: a[off], convs)
+                    new_ssd[lo + off] = jax.tree.map(lambda a: a[off], ssds)
+
+        x = norm_apply(cfg.norm, x, params["final_norm"])
+        logits = self._unembed(params, x)[:, 0]
+        new_state = {
+            "kv_full": {"k": jnp.stack(new_full_k), "v": jnp.stack(new_full_v)},
+            "kv_swa": {"k": jnp.concatenate(new_swa_k), "v": jnp.concatenate(new_swa_v)},
+            "swa_pos": swa_pos,
+            "conv": jnp.stack(new_conv),
+            "ssd": jnp.stack(new_ssd),
+        }
+        return logits, new_state

@@ -1,0 +1,20 @@
+"""Loss functions (memory-aware: never materializes f32 [B,S,V])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_lm_loss(logits, targets, loss_mask):
+    """logits: [B,S,V] (bf16 ok); targets: [B,S] int32; loss_mask: [B,S].
+
+    CE = logsumexp(logits) − logits[target]; both are fused reductions/gathers
+    so the f32 blow-up of the full logits tensor is never materialized.
+    """
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)   # [B,S]
+    tgt = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0].astype(jnp.float32)
+    ce = lse - tgt
+    mask = loss_mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce * mask) / denom

@@ -1,0 +1,83 @@
+"""Mamba-2 LM (attention-free SSD backbone).
+
+Decode state = {"conv": [L,B,K-1,conv_dim], "ssd": [L,B,nh,hd,N] f32} — the
+fixed-size generalization of the KV cache for DéjàVu streaming.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import embed_init, logical_constraint, norm_apply, norm_init, split_keys
+from repro.models.losses import causal_lm_loss
+from repro.models import ssm
+
+
+class MambaLM:
+    def __init__(self, cfg: ArchConfig, backend: str = "xla", remat: bool = False):
+        self.cfg = cfg
+        self.backend = backend
+        self.remat = remat
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        kE, kL, kH = split_keys(key, 3)
+        p = {"embed": embed_init(kE, (cfg.vocab_size, cfg.d_model), dtype)}
+
+        def one_layer(k):
+            return {"ln": norm_init(cfg.norm, cfg.d_model, dtype),
+                    "ssm": ssm.ssm_init(k, cfg, dtype)}
+
+        keys = split_keys(kL, cfg.num_layers)
+        p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *[one_layer(k) for k in keys])
+        p["final_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(kH, (cfg.d_model, cfg.vocab_size), dtype)
+        return p
+
+    def _unembed(self, params, x):
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        return logical_constraint(x @ head, "batch", None, "vocab")
+
+    def _forward(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+
+        def body(x, lp):
+            h = norm_apply(cfg.norm, x, lp["ln"])
+            out, hfin, conv = ssm.ssm_prefill(h, lp["ssm"], cfg, backend=self.backend)
+            return x + out, (hfin, conv)
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, (hs, convs) = jax.lax.scan(body, x, params["layers"])
+        x = norm_apply(cfg.norm, x, params["final_norm"])
+        return x, hs, convs
+
+    def loss(self, params, batch):
+        x, _, _ = self._forward(params, batch["tokens"])
+        logits = self._unembed(params, x)
+        return causal_lm_loss(logits, batch["targets"], batch["loss_mask"])
+
+    def prefill(self, params, batch, max_len=None):
+        x, hs, convs = self._forward(params, batch["tokens"])
+        logits = self._unembed(params, x[:, -1:, :])[:, 0]
+        state = {"conv": convs, "ssd": hs}
+        return logits, state, jnp.int32(batch["tokens"].shape[1])
+
+    def decode_step(self, params, state, token, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token[:, None], axis=0)
+
+        def body(x, xs):
+            lp, conv, h = xs
+            hin = norm_apply(cfg.norm, x, lp["ln"])
+            out, h, conv = ssm.ssm_decode(hin, lp["ssm"], cfg, h, conv)
+            return x + out, (conv, h)
+
+        x, (convs, hs) = jax.lax.scan(body, x, (params["layers"], state["conv"], state["ssd"]))
+        x = norm_apply(cfg.norm, x, params["final_norm"])
+        logits = self._unembed(params, x)[:, 0]
+        return logits, {"conv": convs, "ssd": hs}

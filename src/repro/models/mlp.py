@@ -1,0 +1,30 @@
+"""Dense MLP blocks: gated (SiLU/LLaMA-style) and plain (GELU / squared-ReLU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import activation_fn, dense_init, logical_constraint, split_keys
+
+
+def mlp_init(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.activation == "silu":  # gated
+        k1, k2, k3 = split_keys(key, 3)
+        return {"w_gate": dense_init(k1, (d, ff), dtype),
+                "w_up": dense_init(k2, (d, ff), dtype),
+                "w_down": dense_init(k3, (ff, d), dtype)}
+    k1, k2 = split_keys(key, 2)
+    return {"w_up": dense_init(k1, (d, ff), dtype),
+            "w_down": dense_init(k2, (ff, d), dtype)}
+
+
+def mlp_apply(x, p, cfg):
+    act = activation_fn(cfg.activation)
+    x = logical_constraint(x, "batch", "mlp_seq", None)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = act(x @ p["w_up"])
+    h = logical_constraint(h, "batch", "mlp_seq", "ff")
+    out = h @ p["w_down"]
+    return logical_constraint(out, "batch", "mlp_seq", None)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN with sort-based, capacity-bounded token dispatch.
+
+Design notes (TPU adaptation — see DESIGN.md):
+  * We deliberately avoid the GShard one-hot dispatch einsum (O(T·E·C·d))
+    whose FLOP cost dwarfs the useful expert compute.  Instead tokens are
+    grouped by expert with a stable sort over [T·k] entries; positions within
+    an expert come from `searchsorted` over the sorted expert ids; tokens
+    beyond expert capacity are dropped (written to a spill row).
+  * Expert compute is a batched matmul [E,C,d]×[E,d,ff] so the `experts`
+    dimension shards cleanly over the `model` mesh axis (expert parallelism).
+  * Useful FLOPs scale as T·k·(3·d·ff)·capacity_factor — the active-params
+    regime — which keeps the roofline "useful compute" ratio honest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation_fn, dense_init, logical_constraint, split_keys
+
+
+def moe_init(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = split_keys(key, 4)
+    return {
+        "router": dense_init(kr, (d, e), jnp.float32, scale=0.02),
+        "w_gate": dense_init(kg, (e, d, ff), dtype),
+        "w_up": dense_init(ku, (e, d, ff), dtype),
+        "w_down": dense_init(kd, (e, ff, d), dtype),
+    }
+
+
+def capacity(num_tokens: int, cfg) -> int:
+    c = int(-(-num_tokens * cfg.experts_per_token * cfg.moe_capacity_factor // cfg.num_experts))
+    return max(c, 1)
+
+
+def moe_apply(x, p, cfg, return_aux: bool = False):
+    """x: [T, d] flattened tokens -> [T, d] (+ aux load-balancing loss)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = capacity(t, cfg)
+    act = activation_fn(cfg.activation)
+
+    logits = (x.astype(jnp.float32) @ p["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                    # [T, k]
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # --- group (token, slot) entries by expert ------------------------------
+    fe = eidx.reshape(-1)                                   # [T*k] expert id
+    order = jnp.argsort(fe, stable=True)                    # group by expert
+    se = fe[order]
+    ar = jnp.arange(t * k, dtype=jnp.int32)
+    pos_in_e = ar - jnp.searchsorted(se, se, side="left").astype(jnp.int32)
+    keep = pos_in_e < c
+    slot = jnp.where(keep, se * c + pos_in_e, e * c)        # spill row at E*C
+
+    xr = jnp.take(x, order // k, axis=0)                    # [T*k, d]
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(xr, mode="drop")
+    h = buf[: e * c].reshape(e, c, d)
+    h = logical_constraint(h, "experts", None, None)
+
+    # --- expert FFN (batched over experts; shards over `model`) -------------
+    y = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+    y = act(y) * jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    y = logical_constraint(y, "experts", None, None)
+    y = jnp.einsum("ecf,efd->ecd", y, p["w_down"])
+
+    # --- combine back to tokens --------------------------------------------
+    yflat = jnp.concatenate([y.reshape(e * c, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    out_sorted = jnp.take(yflat, slot, axis=0)              # [T*k, d]; spill→0
+    inv = jnp.zeros((t * k,), jnp.int32).at[order].set(ar)
+    out_entries = jnp.take(out_sorted, inv, axis=0).reshape(t, k, d)
+    out = jnp.sum(out_entries * gate[..., None].astype(out_entries.dtype), axis=1)
+
+    if not return_aux:
+        return out
+    # load-balancing auxiliary loss (Switch-style): E * Σ_e f_e · p_e
+    me = jnp.mean(probs, axis=0)                            # mean router prob
+    ce = jnp.zeros((e,), jnp.float32).at[fe].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,24 @@
+"""build_model(cfg) — family dispatch for the unified Model API.
+
+Every model exposes: ``init(key)``, ``loss(params, batch)``,
+``prefill(params, batch, max_len)``, ``decode_step(params, state, token, pos)``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import DecoderLM
+from repro.models.mamba_lm import MambaLM
+from repro.models.hybrid import HybridLM
+from repro.models.encdec import EncDecLM
+
+
+def build_model(cfg: ArchConfig, backend: str = "xla", remat: bool = False):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, backend=backend, remat=remat)
+    if cfg.family == "ssm":
+        return MambaLM(cfg, backend=backend, remat=remat)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, backend=backend, remat=remat)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, backend=backend, remat=remat)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,266 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Prefill/training use the chunked SSD algorithm (intra-chunk attention-like
+matmuls + inter-chunk state recurrence — MXU-friendly); decode is the O(1)
+recurrent update.  The recurrent state (``ssd`` [nh,hd,N] f32 + ``conv``
+[K-1,conv_dim]) is this family's "decode state" for DéjàVu streaming.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, split_keys
+
+DEFAULT_CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def ssm_init(key, cfg, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh, kconv = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    conv_dim = di + 2 * g * n
+    kin, kout, kconv_w, ka, kdt = split_keys(key, 5)
+    return {
+        "w_in": dense_init(kin, (d, 2 * di + 2 * g * n + nh), dtype),
+        "w_out": dense_init(kout, (di, d), dtype),
+        "conv_w": dense_init(kconv_w, (kconv, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+    }
+
+
+def _split_in(h, cfg):
+    di, g, n, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = h[..., :di]
+    xbc = h[..., di: 2 * di + 2 * g * n]
+    dt = h[..., 2 * di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _proj_in_parts(x, p, cfg):
+    """Input projection as per-segment matmuls over SLICED (replicated)
+    weight columns — mathematically identical to one big matmul, but each
+    segment's output dim shards cleanly over `model` (z/x: d_inner, B/C:
+    groups·state), which is what makes batch=1 long-context decode scale
+    (see DESIGN.md / §Perf mamba2 hillclimb).  Returns (z, x, b, c, dt).
+
+    The split exists FOR sharding: when no `d_inner` rule is active the
+    single fused matmul is used instead (the 5-way weight slicing costs
+    extra copies with nothing to pay for them — measured in §Perf)."""
+    from repro.models import common
+    from repro.models.common import logical_constraint
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    gn = g * n
+    w = p["w_in"]
+    nd = x.ndim
+    rules = common._LOGICAL_RULES or {}
+    if rules.get("d_inner") is None:
+        h = x @ w
+        return (h[..., :di], h[..., di: 2 * di],
+                h[..., 2 * di: 2 * di + gn],
+                h[..., 2 * di + gn: 2 * di + 2 * gn],
+                h[..., 2 * di + 2 * gn:])
+    pre = [None] * (nd - 1)
+    z = logical_constraint(x @ w[..., :di], *pre, "d_inner")
+    xp = logical_constraint(x @ w[..., di: 2 * di], *pre, "d_inner")
+    bp = logical_constraint(x @ w[..., 2 * di: 2 * di + gn], *pre, "ssm_gn")
+    cp = logical_constraint(x @ w[..., 2 * di + gn: 2 * di + 2 * gn], *pre, "ssm_gn")
+    dt = x @ w[..., 2 * di + 2 * gn:]
+    return z, xp, bp, cp, dt
+
+
+def _conv_slices(cfg):
+    """(x, b, c) channel slices of the concatenated conv buffers."""
+    di, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    return slice(0, di), slice(di, di + gn), slice(di + gn, di + 2 * gn)
+
+
+def _split_xbc(xbc, cfg):
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xbc[..., :di]
+    bmat = xbc[..., di: di + g * n]
+    cmat = xbc[..., di + g * n:]
+    return x, bmat, cmat
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (prefill / training)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, chunk: int = DEFAULT_CHUNK, h0=None):
+    """Chunked SSD.  x: [B,S,nh,hd]; dt: [B,S,nh] (post-softplus);
+    a_neg: [nh] (negative); bmat/cmat: [B,S,G,N].  Returns (y, h_final).
+    All state math in f32.
+    """
+    b, s, nh, hd = x.shape
+    g, n = bmat.shape[-2], bmat.shape[-1]
+    rep = nh // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    xs = x.reshape(b, nc, chunk, nh, hd).astype(jnp.float32)
+    dts = dt.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    bs = bmat.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    cs = cmat.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    da = dts * a_neg                                   # [b,nc,q,nh]
+    da_cum = jnp.cumsum(da, axis=2)                    # inclusive
+    # intra-chunk decay L[i,j,h] = exp(da_cum[i] - da_cum[j]), i >= j.
+    # Mask BEFORE exp: masked (i<j) entries have positive li that overflows
+    # exp, and where(mask, inf, 0) poisons gradients with inf·0 = NaN.
+    li = da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :]   # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    li = jnp.where(tri[None, None, :, :, None], li, -1e30)
+    lmat = jnp.exp(li)
+
+    cb = jnp.einsum("bcign,bcjgn->bcgij", cs, bs)      # [b,nc,g,i,j]
+    cb_h = jnp.repeat(cb, rep, axis=2)                 # [b,nc,nh,i,j]
+    scores = cb_h * jnp.moveaxis(lmat, -1, 2)          # [b,nc,h,i,j]
+    y_diag = jnp.einsum("bchij,bcjh,bcjhd->bcihd", scores, dts, xs)
+
+    # chunk state contributions S_c = Σ_j exp(da_last - da_j)·dt_j·B_j⊗x_j
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)      # [b,nc,j,h]
+    b_h = jnp.repeat(bs, rep, axis=3)                  # [b,nc,j,nh,n]
+    states = jnp.einsum("bcjhn,bcjh,bcjh,bcjhd->bchdn",
+                        b_h, decay_states, dts, xs)    # [b,nc,nh,hd,n]
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])         # [b,nc,nh]
+
+    hinit = jnp.zeros((b, nh, hd, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def body(h, inputs):
+        s_c, dec = inputs                              # [b,nh,hd,n], [b,nh]
+        h_out = h * dec[:, :, None, None] + s_c
+        return h_out, h                                # emit state ENTERING chunk
+
+    hfin, h_in = jax.lax.scan(body, hinit,
+                              (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                    # [b,nc,nh,hd,n]
+
+    c_h = jnp.repeat(cs, rep, axis=3)                  # [b,nc,i,nh,n]
+    y_off = jnp.einsum("bcihn,bchdn,bcih->bcihd", c_h, h_in, jnp.exp(da_cum))
+    y = (y_diag + y_off).reshape(b, sp, nh, hd)[:, :s]
+    return y.astype(x.dtype), hfin
+
+
+def ssd_decode_step(x, dt, a_neg, bmat, cmat, h):
+    """One-token recurrent update.  x: [B,nh,hd]; dt: [B,nh]; b/c: [B,G,N];
+    h: [B,nh,hd,N] f32.  Returns (y [B,nh,hd], h')."""
+    from repro.models.common import logical_constraint
+    nh = x.shape[1]
+    g = bmat.shape[1]
+    rep = nh // g
+    xf = logical_constraint(x.astype(jnp.float32), None, "ssm_heads", None)
+    da = jnp.exp(dt.astype(jnp.float32) * a_neg)       # [B,nh]
+    b_h = jnp.repeat(bmat.astype(jnp.float32), rep, axis=1)    # [B,nh,N]
+    c_h = jnp.repeat(cmat.astype(jnp.float32), rep, axis=1)
+    b_h = logical_constraint(b_h, None, "ssm_heads", None)
+    c_h = logical_constraint(c_h, None, "ssm_heads", None)
+    h_new = h * da[:, :, None, None] + (dt.astype(jnp.float32)[:, :, None, None]
+                                        * xf[:, :, :, None] * b_h[:, :, None, :])
+    h_new = logical_constraint(h_new, None, "ssm_heads", None, None)
+    y = jnp.einsum("bhdn,bhn->bhd", h_new, c_h)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block (conv + gate + SSD + norm + out-proj)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv.  xbc: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + bias
+
+
+def ssm_prefill(x, p, cfg, h0=None, conv0=None, chunk: int = DEFAULT_CHUNK, backend: str = "xla"):
+    """x: [B,S,d] -> (out [B,S,d], ssd_state [B,nh,hd,N], conv_state [B,K-1,conv_dim])."""
+    from repro.models.common import logical_constraint
+    z, xp, bp, cp, dt = _proj_in_parts(x, p, cfg)
+    sx, sb, sc = _conv_slices(cfg)
+    km1 = cfg.ssm_conv - 1
+
+    def conv_part(part, ch_slice, ctx):
+        w = p["conv_w"][:, ch_slice]
+        bias = p["conv_b"][ch_slice]
+        if ctx is not None:
+            full = jnp.concatenate([ctx.astype(part.dtype), part], axis=1)
+            return _causal_conv(full, w, bias)[:, ctx.shape[1]:]
+        return _causal_conv(part, w, bias)
+
+    ctx_x = conv0[:, :, sx] if conv0 is not None else None
+    ctx_b = conv0[:, :, sb] if conv0 is not None else None
+    ctx_c = conv0[:, :, sc] if conv0 is not None else None
+    xin = jax.nn.silu(conv_part(xp, sx, ctx_x))
+    bmat = jax.nn.silu(conv_part(bp, sb, ctx_b))
+    cmat = jax.nn.silu(conv_part(cp, sc, ctx_c))
+
+    def tail(part, ctx):
+        seq = jnp.concatenate([ctx, part], axis=1) if ctx is not None else \
+            jnp.pad(part, ((0, 0), (km1, 0), (0, 0)))
+        return seq[:, -km1:]
+
+    conv_state = jnp.concatenate(
+        [tail(xp, ctx_x), tail(bp, ctx_b), tail(cp, ctx_c)], axis=2)
+
+    b, s, _ = x.shape
+    xh = xin.reshape(b, s, cfg.ssm_nheads, cfg.ssm_head_dim)
+    bm = bmat.reshape(b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    cm = cmat.reshape(b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        y, hfin = kops.ssd_auto(xh, dtv, a_neg, bm, cm, chunk=chunk, h0=h0)
+    else:
+        y, hfin = ssd_chunked(xh, dtv, a_neg, bm, cm, chunk=chunk, h0=h0)
+    y = y + (p["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = logical_constraint(y, None, None, "d_inner")
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["w_out"], hfin, conv_state.astype(x.dtype)
+
+
+def ssm_decode(x, p, cfg, ssd_state, conv_state):
+    """x: [B,1,d] -> (out [B,1,d], ssd_state', conv_state')."""
+    from repro.models.common import logical_constraint
+    b = x.shape[0]
+    z, xp, bp, cp, dt = _proj_in_parts(x[:, 0], p, cfg)
+    sx, sb, sc = _conv_slices(cfg)
+
+    def conv_step(part, ch_slice, ctx):
+        w = p["conv_w"][:, ch_slice]
+        bias = p["conv_b"][ch_slice]
+        win = jnp.concatenate([ctx.astype(part.dtype), part[:, None, :]], axis=1)
+        out = jnp.einsum("bkc,kc->bc", win, w) + bias
+        return jax.nn.silu(out), win[:, 1:]
+
+    xin, wx = conv_step(xp, sx, conv_state[:, :, sx])
+    bmat, wb = conv_step(bp, sb, conv_state[:, :, sb])
+    cmat, wc = conv_step(cp, sc, conv_state[:, :, sc])
+    new_conv = jnp.concatenate([wx, wb, wc], axis=2).astype(conv_state.dtype)
+
+    xh = xin.reshape(b, cfg.ssm_nheads, cfg.ssm_head_dim)
+    bm = bmat.reshape(b, cfg.ssm_ngroups, cfg.ssm_state)
+    cm = cmat.reshape(b, cfg.ssm_ngroups, cfg.ssm_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])
+    y, h_new = ssd_decode_step(xh, dtv, a_neg, bm, cm, ssd_state)
+    y = y + (p["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, cfg.d_inner)
+    y = logical_constraint(y, None, "d_inner")
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    return (y @ p["w_out"])[:, None, :], h_new, new_conv

@@ -1,0 +1,4 @@
+from repro.serving.request import Request
+from repro.serving.engine import ServingEngine, EngineReport
+
+__all__ = ["Request", "ServingEngine", "EngineReport"]

@@ -1,0 +1,162 @@
+"""ServingEngine: microbatch round-robin serving loop over a DejaVuCluster.
+
+Mirrors the strict round-robin schedule of `core.schedule.rr_schedule`
+(FasterTransformer semantics): in-flight microbatch slots advance one step per
+round; early-stopped slots are backfilled from the queue.  Failure injection /
+detection / 4-step recovery run between steps; recovered microbatches roll
+back to their last replicated step and regenerate — with greedy sampling the
+regenerated tokens are bit-identical (asserted in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.cluster import DejaVuCluster
+from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.serving.request import Microbatch, Request, form_microbatches
+from repro.serving.sampling import greedy
+
+
+@dataclass
+class EngineReport:
+    tokens: Dict[int, List[int]]            # rid -> generated tokens
+    steps_executed: int = 0
+    steps_redone: int = 0
+    failures: int = 0
+    recoveries: int = 0
+    transfer_bytes: Dict[str, int] = field(default_factory=dict)
+    events: List[dict] = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, model, params, n_workers: int, *,
+                 mode: str = "colocated",
+                 dp_split: Optional[tuple] = None,
+                 microbatch: int = 2,
+                 swapping: bool = False, replication: bool = False,
+                 compress_replicas: bool = False,
+                 hw: HardwareModel = DEFAULT_HW,
+                 sampler: Callable = greedy):
+        self.cfg = cfg
+        self.microbatch = microbatch
+        self.sampler = sampler
+        self.cluster = DejaVuCluster(cfg, model, params, n_workers, mode=mode,
+                                     dp_split=dp_split, swapping=swapping,
+                                     replication=replication,
+                                     compress_replicas=compress_replicas, hw=hw)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request], *,
+            fail_at: Optional[Dict[int, int]] = None,
+            migrate_at: Optional[Dict[int, int]] = None,
+            repartition_at: Optional[Dict[int, int]] = None) -> EngineReport:
+        """fail_at / migrate_at: {global_step: worker_id}; repartition_at:
+        {global_step: new_depth}."""
+        fail_at = dict(fail_at or {})
+        migrate_at = dict(migrate_at or {})
+        repartition_at = dict(repartition_at or {})
+        mbs = form_microbatches(requests, self.microbatch)
+        queue = list(mbs)
+        depth = len(self.cluster.token_group)
+        slots: List[Optional[Microbatch]] = [None] * depth
+        report = EngineReport(tokens={r.rid: r.tokens for r in requests})
+        gstep = 0
+
+        def active_ids() -> List[int]:
+            return [s.mb for s in slots if s is not None]
+
+        while any(s is not None for s in slots) or queue:
+            for q in range(depth):
+                if slots[q] is None and queue:
+                    slots[q] = queue.pop(0)
+            progressed = False
+            for q in range(depth):
+                mb = slots[q]
+                if mb is None:
+                    continue
+                progressed = True
+                gstep += 1
+                # --- scheduled control events -------------------------------
+                if gstep in fail_at:
+                    self.cluster.inject_failure(fail_at.pop(gstep))
+                    report.failures += 1
+                if gstep in migrate_at:
+                    res = self.cluster.migrate_worker(migrate_at.pop(gstep),
+                                                      active_ids())
+                    report.recoveries += 1
+                    self._apply_resume(res, slots, report)
+                if gstep in repartition_at:
+                    self.cluster.repartition(repartition_at.pop(gstep), active_ids())
+
+                # --- advance this slot one step ------------------------------
+                try:
+                    self._advance(mb, report)
+                except RuntimeError:
+                    # a dead worker was hit mid-pipeline: detect + recover
+                    resume = self.cluster.detect_and_recover(active_ids())
+                    report.recoveries += 1
+                    self._apply_resume(resume, slots, report)
+                    self._advance(mb, report)  # re-execute this slot's step
+                if mb.done:
+                    slots[q] = None
+        return report
+
+    # ------------------------------------------------------------------
+    def _advance(self, mb: Microbatch, report: EngineReport) -> None:
+        cl = self.cluster
+        if mb.next_step == 0:
+            tokens = jnp.asarray(mb.batch_prompts())
+            logits = cl.prefill_mb(mb.mb, tokens, mb.n_new)
+            tok = self.sampler(logits, 0)
+            self._emit(mb, tok, 0)
+            mb.next_step = 1
+        else:
+            i = mb.next_step
+            last = np.asarray([r.tokens[i - 1] if len(r.tokens) >= i else 0
+                               for r in mb.requests], np.int32)
+            logits = cl.decode_mb(mb.mb, jnp.asarray(last), i)
+            tok = self.sampler(logits, i)
+            self._emit(mb, tok, i)
+            mb.next_step = i + 1
+        report.steps_executed += 1
+        # n_new tokens total: token_0 from prefill + decode steps 1..n_new-1
+        if mb.next_step >= mb.n_new:
+            mb.done = True
+
+    @staticmethod
+    def _emit(mb: Microbatch, tok: np.ndarray, i: int) -> None:
+        for b, r in enumerate(mb.requests):
+            if len(r.tokens) == i:
+                r.tokens.append(int(tok[b]))
+            else:                      # regeneration after rollback
+                r.tokens[i] = int(tok[b])
+            if r.eos_id is not None and int(tok[b]) == r.eos_id:
+                r.done = True
+
+    def _apply_resume(self, resume: Dict[int, int],
+                      slots: List[Optional[Microbatch]],
+                      report: EngineReport) -> None:
+        for s in slots:
+            if s is not None and s.mb in resume:
+                r = resume[s.mb]
+                redone = max(0, s.next_step - r)
+                report.steps_redone += redone
+                s.next_step = min(s.next_step, max(r, 0))
+                for req in s.requests:   # truncate tokens beyond resume point
+                    del req.tokens[s.next_step:]
+
+    # ------------------------------------------------------------------
+    def transfer_summary(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        groups = set(self.cluster.prompt_group + self.cluster.token_group)
+        transports = [self.cluster.net]
+        for w in groups:
+            transports += [w.cache.net, w.cache.hostlink, w.cache.local]
+        for t in transports:
+            out[t.kind] = out.get(t.kind, 0) + t.bytes_total()
+        return out

@@ -1,0 +1,51 @@
+"""Request + microbatch lifecycle."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclass
+class Microbatch:
+    mb: int
+    requests: List[Request]
+    next_step: int = 0            # 0 = needs prefill; i>=1 = next decode step
+    n_new: int = 0                # synchronous token budget (max over requests)
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return self.requests[0].prompt_len
+
+    def batch_prompts(self) -> np.ndarray:
+        return np.stack([r.prompt for r in self.requests]).astype(np.int32)
+
+
+def form_microbatches(requests: List[Request], size: int) -> List[Microbatch]:
+    """Group fixed-size microbatches; prompts inside one microbatch must share
+    a length (the paper's setting — fixed prompt size per experiment)."""
+    mbs = []
+    for i in range(0, len(requests), size):
+        group = requests[i: i + size]
+        lens = {r.prompt_len for r in group}
+        assert len(lens) == 1, "prompts within a microbatch must share length"
+        mbs.append(Microbatch(mb=len(mbs), requests=group,
+                              n_new=max(r.max_new for r in group)))
+    return mbs

@@ -1,0 +1,28 @@
+"""Token sampling strategies (deterministic greedy is the default — required
+for DéjàVu's recompute-after-recovery to regenerate identical tokens)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def greedy(logits, _step: int = 0) -> np.ndarray:
+    return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+
+class TopKSampler:
+    """Seeded top-k/temperature sampling.  The per-(request, step) fold makes
+    regeneration after failure recovery reproduce identical tokens."""
+
+    def __init__(self, k: int = 40, temperature: float = 1.0, seed: int = 0):
+        self.k = k
+        self.temperature = temperature
+        self.seed = seed
+
+    def __call__(self, logits, step: int = 0) -> np.ndarray:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        vals, idx = jax.lax.top_k(logits / self.temperature, self.k)
+        choice = jax.random.categorical(key, vals, axis=-1)
+        return np.asarray(jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0],
+                          np.int32)

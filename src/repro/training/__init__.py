@@ -1,0 +1,8 @@
+from repro.training.optimizer import adamw_init, adamw_update, global_norm
+from repro.training.train import make_train_step, TrainConfig
+from repro.training.data import SyntheticDataPipeline
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "make_train_step",
+           "TrainConfig", "SyntheticDataPipeline", "save_checkpoint",
+           "restore_checkpoint", "latest_step"]

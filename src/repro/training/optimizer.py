@@ -1,0 +1,82 @@
+"""AdamW (pure JAX), global-norm clipping, and compressed gradient collectives.
+
+Optimizer moments are f32 regardless of parameter dtype; the update is
+computed in f32 and cast back.  `compressed_allreduce` (int8 + per-tensor
+scale, all-gather + local dequant-sum inside shard_map) is the beyond-paper
+distributed-optimization trick — 4× less cross-DP gradient traffic than f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_p = p.astype(jnp.float32) - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                              + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Compressed gradient all-reduce (beyond-paper distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_allreduce(x, axis_name: str):
+    """int8 all-gather + local dequant-sum over `axis_name` (inside shard_map).
+
+    Moves 1/4 the bytes of an f32 all-reduce (1/2 of bf16) at the cost of one
+    quantization error per participant — acceptable for gradients when paired
+    with error-tolerant optimizers (Adam normalizes per-coordinate anyway).
+    """
+    q, scale = quantize_int8(x.astype(jnp.float32))
+    qs = jax.lax.all_gather(q, axis_name)                 # [n, ...] int8
+    ss = jax.lax.all_gather(scale, axis_name)             # [n] f32
+    return jnp.sum(qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * q.ndim),
+                   axis=0)

@@ -1,0 +1,63 @@
+"""Training step factory: loss+grad (+ optional microbatched accumulation),
+AdamW update, metrics.  Sharding is applied at the jit boundary by the
+launcher (launch/train.py); remat is a model flag.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWState, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_accum: int = 1        # microbatches per step (sequential, in-jit)
+
+
+def make_train_step(model, tcfg: TrainConfig = TrainConfig()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With grad_accum > 1, the leading batch dim is split into
+    microbatches accumulated inside one jit (a lax.scan, so HLO stays small).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if tcfg.grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            n = tcfg.grad_accum
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_l, acc_g = acc
+                return (acc_l + l / n,
+                        jax.tree.map(lambda a, b_: a + b_ / n, acc_g, g)), None
+
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(body, zero, micro)
+        params, opt_state, om = adamw_update(
+            grads, opt_state, params, lr=tcfg.lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm)
+        metrics = {"loss": loss.astype(jnp.float32), **om}
+        return params, opt_state, metrics
+
+    return train_step

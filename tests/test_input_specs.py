@@ -1,0 +1,60 @@
+"""Deliverable-(e/f) surface: input_specs() must be well-formed for every
+(arch × shape) cell — ShapeDtypeStructs only (no allocation), shapes
+consistent with the config and the decode-state layout.  eval_shape-based,
+so the full 40-cell matrix checks in seconds."""
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, supports_shape
+from repro.launch.specs import input_specs
+from repro.kvcache.cache import decode_state_shapes
+from repro.models import build_model
+
+CELLS = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_input_specs_cover_every_cell(arch, shape):
+    cfg = get_arch(arch)
+    sh = SHAPES[shape]
+    ok, reason = supports_shape(cfg, sh)
+    if not ok:
+        assert "sub-quadratic" in reason
+        return
+    model = build_model(cfg)
+    specs = input_specs(cfg, sh, model)
+    # every leaf is a ShapeDtypeStruct — nothing allocated
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    assert "params" in specs
+    if sh.kind == "train":
+        assert specs["batch"]["tokens"].shape[0] == sh.global_batch
+        assert "opt_state" in specs
+        # optimizer moments mirror the param tree
+        n_p = len(jax.tree.leaves(specs["params"]))
+        n_m = len(jax.tree.leaves(specs["opt_state"].m))
+        assert n_p == n_m
+    elif sh.kind == "prefill":
+        toks = specs["batch"]["tokens"]
+        assert toks.shape[0] == sh.global_batch
+        assert toks.shape[1] + cfg.context_overhead == sh.seq_len or \
+            cfg.family == "encdec"
+    else:  # decode
+        assert specs["token"].shape == (sh.global_batch,)
+        # state specs match the canonical decode-state layout exactly
+        want = decode_state_shapes(cfg, sh.global_batch, sh.seq_len)
+
+        def flatten(d, pre=""):
+            out = {}
+            for k, v in d.items():
+                if isinstance(v, dict):
+                    out.update(flatten(v, pre + k + "/"))
+                else:
+                    out[pre + k] = v
+            return out
+
+        got = flatten(specs["state"])
+        expect = flatten(want)
+        assert set(got) == set(expect)
+        for k in got:
+            assert tuple(got[k].shape) == tuple(expect[k][0]), k

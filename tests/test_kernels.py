@@ -1,0 +1,115 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.kv_pack import kv_pack, kv_unpack
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels import ref
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,hq,hkv,d,causal,bq,bk", [
+    (2, 64, 64, 4, 2, 16, True, 32, 32),
+    (1, 100, 100, 6, 2, 32, True, 32, 32),       # non-multiple seq
+    (2, 32, 96, 4, 4, 16, True, 16, 32),         # cross-length causal
+    (1, 64, 64, 2, 1, 64, False, 64, 64),        # bidirectional
+    (1, 128, 128, 8, 8, 16, True, 128, 128),     # MHA single block
+])
+def test_flash_attention(b, sq, skv, hq, hkv, d, causal, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    expected = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,hq,hkv,d,bk,n_valid", [
+    (2, 128, 4, 2, 16, 32, 100),
+    (1, 100, 8, 2, 32, 64, 100),                 # padding path
+    (3, 64, 4, 4, 16, 64, 1),                    # single valid slot
+    (1, 256, 2, 1, 64, 256, 200),
+])
+def test_decode_attention(b, s, hq, hkv, d, bk, n_valid, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    valid = jnp.arange(s) < n_valid
+    out = decode_attention(q, k, v, valid, block_k=bk)
+    expected = ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,B,S,H,D,t0,w,tb", [
+    (3, 2, 64, 4, 16, 16, 24, 8),
+    (2, 1, 32, 2, 8, 0, 32, 8),                  # whole cache
+    (4, 2, 48, 2, 16, 40, 8, 8),                 # tail window
+    (1, 1, 16, 1, 8, 8, 8, 4),
+])
+def test_kv_pack_unpack_roundtrip(L, B, S, H, D, t0, w, tb, dtype):
+    ks = jax.random.split(KEY, 2)
+    cache = jax.random.normal(ks[0], (L, B, S, H, D), dtype)
+    packed = kv_pack(cache, t0, width=w, token_block=tb)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(ref.kv_pack_ref(cache, t0, w)))
+    buf = jax.random.normal(ks[1], (L, B, w, H, D), dtype)
+    restored = kv_unpack(cache.copy(), buf, t0, token_block=tb)
+    np.testing.assert_array_equal(np.asarray(restored),
+                                  np.asarray(ref.kv_unpack_ref(cache, buf, t0)))
+
+
+@pytest.mark.parametrize("B,S,NH,HD,G,N,CH", [
+    (2, 96, 4, 16, 1, 8, 32),
+    (1, 64, 8, 8, 2, 16, 16),
+    (2, 50, 4, 16, 1, 8, 32),                    # non-multiple of chunk
+    (1, 33, 2, 8, 1, 4, 16),
+])
+def test_ssd_kernel_and_chunked_vs_sequential(B, S, NH, HD, G, N, CH):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, NH, HD), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, NH)))
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (NH,)) * 0.3)
+    bm = 0.5 * jax.random.normal(ks[3], (B, S, G, N), jnp.float32)
+    cm = 0.5 * jax.random.normal(ks[0], (B, S, G, N), jnp.float32)
+    h0 = 0.1 * jax.random.normal(ks[1], (B, NH, HD, N), jnp.float32)
+    y_ref, h_ref = ref.ssd_sequential_ref(x, dt, a_neg, bm, cm, h0=h0)
+    y_k, h_k = ssd_scan(x, dt, a_neg, bm, cm, h0=h0, chunk=CH)
+    y_j, h_j = ssd_chunked(x, dt, a_neg, bm, cm, chunk=CH, h0=h0)
+    np.testing.assert_allclose(y_k, y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h_k, h_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(y_j, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_step_matches_sequential():
+    from repro.kernels.ref import ssd_sequential_ref
+    from repro.models.ssm import ssd_decode_step
+    ks = jax.random.split(KEY, 4)
+    B, NH, HD, G, N = 2, 4, 8, 1, 8
+    x = jax.random.normal(ks[0], (B, 5, NH, HD))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, 5, NH)))
+    a_neg = -jnp.exp(0.3 * jax.random.normal(ks[2], (NH,)))
+    bm = 0.5 * jax.random.normal(ks[3], (B, 5, G, N))
+    cm = 0.5 * jax.random.normal(ks[0], (B, 5, G, N))
+    y_ref, h_ref = ssd_sequential_ref(x, dt, a_neg, bm, cm)
+    h = jnp.zeros((B, NH, HD, N))
+    for t in range(5):
+        y, h = ssd_decode_step(x[:, t], dt[:, t], a_neg, bm[:, t], cm[:, t], h)
+    np.testing.assert_allclose(y, y_ref[:, -1], rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-5, atol=1e-5)

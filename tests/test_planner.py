@@ -1,0 +1,94 @@
+"""Planner (paper Eqs. 1–6) unit + hypothesis property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import costmodel as cm
+from repro.core.dejavulib.transport import DEFAULT_HW
+from repro.core.planner import (MachineSpec, colocated_inverse_throughput,
+                                estimate_m, min_prompt_depth, min_token_depth,
+                                plan)
+
+CFG = get_arch("opt-66b")
+MACH = MachineSpec()
+
+
+def test_eq3_formula():
+    # I_c = (D−1)(Y−t)/D + Y + N·t
+    assert colocated_inverse_throughput(4, 2.0, 0.1, 100) == pytest.approx(
+        3 * 1.9 / 4 + 2.0 + 10.0)
+
+
+def test_plan_opt66b_feasible_and_beneficial():
+    wl = cm.WorkloadSpec(prompt_len=1000, new_tokens=220, microbatch=16)
+    p = plan(CFG, wl, 8, MACH)
+    assert p.feasible
+    assert p.d_prompt + p.d_token == 8
+    assert p.disagg_beneficial
+    assert 1.0 <= p.m_overhead < 2.0
+
+
+def test_plan_infeasible_when_memory_too_small():
+    wl = cm.WorkloadSpec(prompt_len=4000, new_tokens=500, microbatch=64)
+    small = MachineSpec(chips=2, mem_bytes=2 * 16e9)
+    p = plan(CFG, wl, 4, small)
+    assert not p.feasible
+
+
+@settings(max_examples=40, deadline=None)
+@given(d=st.integers(4, 24),
+       prompt=st.sampled_from([500, 1000, 2000]),
+       new_tokens=st.sampled_from([50, 150, 400]),
+       mb=st.sampled_from([4, 8, 16]))
+def test_plan_properties(d, prompt, new_tokens, mb):
+    wl = cm.WorkloadSpec(prompt, new_tokens, mb)
+    p = plan(CFG, wl, d, MACH)
+    if not p.feasible:
+        return
+    # split is a partition respecting the memory floors (Eqs. 1–2)
+    assert p.d_prompt + p.d_token == d
+    assert p.d_prompt >= 1 and p.d_token >= 1
+    assert p.d_token >= min_token_depth(CFG, wl, MACH)
+    # I_dis is the max of a balanced pair and never negative
+    assert p.inv_tp_disagg > 0
+    # the integer split is optimal among all feasible splits (brute force)
+    best = None
+    y = cm.stage_prompt_time(CFG, wl, CFG.num_layers, d * MACH.chips)
+    t = cm.stage_token_time(CFG, wl, CFG.num_layers, d * MACH.chips,
+                            prompt + new_tokens)
+    for dt in range(max(min_token_depth(CFG, wl, MACH), 1),
+                    d - min_prompt_depth(CFG, wl, MACH) + 1):
+        dp = d - dt
+        m = estimate_m(CFG, wl, y, dp, MACH, DEFAULT_HW)
+        cand = max(m * y * d / dp, new_tokens * t * d / dt)
+        if best is None or cand < best:
+            best = cand
+    assert p.inv_tp_disagg == pytest.approx(best)
+
+
+def test_larger_n_shifts_machines_to_token_side():
+    """Paper: larger N ⇒ larger D_t (more token machines)."""
+    wl_small = cm.WorkloadSpec(1000, 50, 16)
+    wl_large = cm.WorkloadSpec(1000, 600, 16)
+    p1 = plan(CFG, wl_small, 12, MACH)
+    p2 = plan(CFG, wl_large, 12, MACH)
+    assert p1.feasible and p2.feasible
+    assert p2.d_token >= p1.d_token
+
+
+def test_larger_prompt_shifts_machines_to_prompt_side():
+    """Paper: larger Y/t ⇒ larger D_p."""
+    p1 = plan(CFG, cm.WorkloadSpec(250, 200, 8), 12, MACH)
+    p2 = plan(CFG, cm.WorkloadSpec(2000, 200, 8), 12, MACH)
+    assert p1.feasible and p2.feasible
+    assert p2.d_prompt >= p1.d_prompt
+
+
+def test_replan_after_failure_shrinks():
+    from repro.core.planner import replan_after_failure
+    wl = cm.WorkloadSpec(1000, 220, 16)
+    p = plan(CFG, wl, 12, MACH)
+    p2 = replan_after_failure(p, CFG, wl, 11, mach=MACH)
+    assert p2.d_prompt + p2.d_token == 11

@@ -1,0 +1,95 @@
+"""Round-robin schedule + simulator invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.planner import MachineSpec, plan
+from repro.core.schedule import Job, rr_schedule
+from repro.core.simulator import (failure_latency, lmsys_like_tokens,
+                                  poisson_arrivals, simulate_baseline,
+                                  simulate_dejavu, simulate_dp)
+
+CFG = PAPER_ARCHS["opt-66b"]
+MACH = MachineSpec()
+
+
+@settings(max_examples=30, deadline=None)
+@given(depth=st.integers(1, 5), njobs=st.integers(1, 8),
+       p=st.floats(0.1, 2.0), t=st.floats(0.01, 0.2),
+       seed=st.integers(0, 5))
+def test_rr_schedule_invariants(depth, njobs, p, t, seed):
+    rng = np.random.default_rng(seed)
+    jobs = [Job(i, float(rng.random() * 2), int(rng.integers(1, 6)))
+            for i in range(njobs)]
+    tr, items = rr_schedule(jobs, pipeline="m", depth=depth, p_dur=p, t_dur=t)
+    # (1) per-stage intervals never overlap
+    per_stage = {}
+    for it in items:
+        per_stage.setdefault(it.stage, []).append(
+            (tr.start[it.key], tr.finish[it.key]))
+    for ivs in per_stage.values():
+        ivs.sort()
+        for (s1, f1), (s2, f2) in zip(ivs, ivs[1:]):
+            assert s2 >= f1 - 1e-9
+    # (2) activation deps: stage s starts after stage s-1 finishes
+    for it in items:
+        if it.stage > 0:
+            prev = (it.pipeline, it.mb, it.kind, it.step, it.stage - 1)
+            assert tr.start[it.key] >= tr.finish[prev] - 1e-9
+    # (3) sampled-token dep: T_i at stage 0 after T_{i-1} at last stage
+    for it in items:
+        if it.kind == "T" and it.stage == 0 and it.step > 0:
+            prev = (it.pipeline, it.mb, "T", it.step - 1, depth - 1)
+            assert tr.start[it.key] >= tr.finish[prev] - 1e-9
+    # (4) every job fully scheduled
+    for j in jobs:
+        assert (("m", j.mb, "T", j.n_tokens - 1, depth - 1) in tr.finish)
+
+
+def _jobs(n=24, seed=0, mean=150):
+    toks = lmsys_like_tokens(n, seed=seed, mean_target=mean)
+    return [Job(i, 0.0, int(toks[i])) for i in range(n)]
+
+
+def test_dejavu_beats_baseline_in_early_stop_regime():
+    """Paper Fig. 12 regime: variable-length outputs cause prompt-injection
+    bubbles in the colocated baseline; disaggregation removes them."""
+    wl = cm.WorkloadSpec(prompt_len=1000, new_tokens=150, microbatch=16)
+    jobs = _jobs(32, mean=150)
+    rb = simulate_baseline(CFG, wl, 8, jobs, MACH)
+    rdv = simulate_dejavu(CFG, wl, 8, jobs, MACH)
+    assert rdv.makespan < rb.makespan
+    assert rb.makespan / rdv.makespan > 1.3
+
+
+def test_dp_between_baseline_and_dejavu():
+    wl = cm.WorkloadSpec(prompt_len=1000, new_tokens=150, microbatch=16)
+    jobs = _jobs(32, mean=150)
+    rb = simulate_baseline(CFG, wl, 8, jobs, MACH)
+    rdp = simulate_dp(CFG, wl, 8, 2, jobs, MACH)
+    assert rdp.makespan < rb.makespan
+
+
+def test_failure_latency_dejavu_much_cheaper():
+    """Figs. 4/14: baseline restarts from scratch; DéjàVu resumes from the
+    last replicated token."""
+    wl = cm.WorkloadSpec(prompt_len=500, new_tokens=1000, microbatch=8)
+    f_dv = failure_latency(CFG, wl, 4, fail_step=500, dejavu=True)
+    f_bl = failure_latency(CFG, wl, 4, fail_step=500, dejavu=False)
+    assert f_dv["slowdown"] < f_bl["slowdown"]
+    assert f_dv["slowdown"] < 1.5           # paper: 1.24×
+    assert f_bl["slowdown"] > 1.5           # paper: 1.91×
+
+
+def test_lmsys_trace_deterministic():
+    a = lmsys_like_tokens(100, seed=3)
+    b = lmsys_like_tokens(100, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 8 and a.max() <= 1024
+
+
+def test_poisson_arrivals_monotone():
+    arr = poisson_arrivals(50, rate=2.0, seed=1)
+    assert (np.diff(arr) > 0).all()
