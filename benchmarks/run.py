@@ -16,6 +16,7 @@ MODULES = [
     ("fig13_swapping", "benchmarks.swapping"),
     ("fig14_15_failures", "benchmarks.failures"),
     ("appB_planner_study", "benchmarks.planner_study"),
+    ("continuous_batching", "benchmarks.continuous_batching"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
 ]

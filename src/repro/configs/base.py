@@ -51,6 +51,9 @@ class ArchConfig:
     max_source_len: int = 4096
     # --- VLM ---
     num_patches: int = 0                     # stub patch-embedding positions
+    # --- paged KV cache (serving) ---
+    kv_block_size: int = 8                   # tokens per KV block (DMA-aligned)
+    kv_pool_blocks: int = 0                  # pool size per stage; 0 = auto
     # --- misc ---
     dtype: str = "bfloat16"
     max_seq_len: int = 524288
@@ -190,6 +193,14 @@ class ArchConfig:
         if self.cross_attention:
             total += self.num_layers * 2 * self.kv_dim * min(self.max_source_len, seq_len) * dtype_bytes
         return total
+
+    def paged_state_bytes(self, live_tokens: int, dtype_bytes: int = 2) -> int:
+        """Decode-state footprint under the paged pool: `live_tokens` rounded
+        up to whole KV blocks (vs `decode_state_bytes`, which reserves the
+        full prompt+max_new window for the request's entire lifetime)."""
+        bs = max(self.kv_block_size, 1)
+        rounded = -(-live_tokens // bs) * bs
+        return self.decode_state_bytes(rounded, dtype_bytes)
 
 
 @dataclass(frozen=True)

@@ -17,9 +17,11 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.controller import Controller
 from repro.core.dejavulib import (PipelineTopo, StreamEngine, NetworkTransport,
-                                  stream_in, stream_out)
+                                  stream_in, stream_out, stream_in_blocks,
+                                  stream_out_blocks)
 from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
 from repro.core.worker import StageWorker
+from repro.kvcache.paged import PoolExhausted, blocks_for
 
 
 def _stage_ranges(num_layers: int, depth: int) -> List[Tuple[int, int]]:
@@ -33,7 +35,9 @@ class DejaVuCluster:
                  mode: str = "colocated", dp_split: Optional[Tuple[int, int]] = None,
                  swapping: bool = False, replication: bool = False,
                  compress_replicas: bool = False,
-                 max_resident: int = 2, hw: HardwareModel = DEFAULT_HW):
+                 max_resident: int = 2, hw: HardwareModel = DEFAULT_HW,
+                 paged: bool = False, kv_block_size: Optional[int] = None,
+                 kv_pool_blocks: Optional[int] = None):
         assert mode in ("colocated", "disaggregated")
         if mode == "disaggregated":
             assert dp_split is not None and sum(dp_split) == n_workers
@@ -46,6 +50,9 @@ class DejaVuCluster:
         self.compress_replicas = compress_replicas
         self.max_resident = max_resident
         self.hw = hw
+        self.paged = paged
+        self.kv_block_size = kv_block_size or cfg.kv_block_size
+        self.kv_pool_blocks = kv_pool_blocks or cfg.kv_pool_blocks or 512
         self.streamer = StreamEngine("cluster")
         self.controller = Controller()
         self.net = NetworkTransport(hw)
@@ -59,10 +66,31 @@ class DejaVuCluster:
             self.token_group = self._build_group(dt, role="token", wid0=dp)
         for w in set(self.prompt_group + self.token_group):
             self.controller.register(w)
+            if paged:
+                w.enable_paging(self.kv_pool_blocks, self.kv_block_size)
         self.mb_pos: Dict[int, int] = {}        # current KV length per microbatch
         self.mb_prompt_len: Dict[int, int] = {}
         self.mb_max_len: Dict[int, int] = {}
         self.mb_batch: Dict[int, int] = {}
+        # paged (per-sequence) bookkeeping
+        self.seq_len: Dict[int, int] = {}       # live tokens per sequence
+        self.seq_prompt_len: Dict[int, int] = {}
+        self.kv_bytes_peak = 0
+
+    # ------------------------------------------------------------------
+    def live_kv_bytes(self) -> int:
+        """Device-resident decode-state bytes right now (dense slots + pages)."""
+        total = 0
+        for w in set(self.prompt_group + self.token_group):
+            if w.paged:
+                total += w.pages.used_bytes()
+            for slot in w.kv.values():
+                total += sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                             for a in slot.values())
+        return total
+
+    def _track_kv_peak(self) -> None:
+        self.kv_bytes_peak = max(self.kv_bytes_peak, self.live_kv_bytes())
 
     # ------------------------------------------------------------------
     def _build_group(self, depth: int, role: str, wid0: int) -> List[StageWorker]:
@@ -104,6 +132,7 @@ class DejaVuCluster:
             for w in self.token_group:
                 if mb in w.kv:
                     w.offload(mb)           # full first offload to host
+        self._track_kv_peak()
         return logits
 
     def _stream_prompt_kv(self, mb: int, plen: int) -> None:
@@ -151,7 +180,137 @@ class DejaVuCluster:
                 w.offload(mb, token_range=(pos, pos + 1))
         for w in set(self.prompt_group + self.token_group):
             w.heartbeat()
+        self._track_kv_peak()
         return x
+
+    # ------------------------------------------------------------------
+    # paged serving primitives (continuous batching; KV moves per BLOCK)
+    # ------------------------------------------------------------------
+    def can_admit(self, prompt_len: int, n_active: int) -> bool:
+        """Admission control: every token-side pool must fit the prompt plus
+        one headroom block per already-running sequence (each may need a new
+        block before this request finishes its first step)."""
+        need = blocks_for(prompt_len + 1, self.kv_block_size) + n_active
+        return all(w.pool.num_free() >= need for w in self.token_group)
+
+    def prefill_seq(self, rid: int, prompt: np.ndarray, max_new: int) -> jnp.ndarray:
+        """Prefill ONE request through the prompt pipeline into pool blocks;
+        in disaggregated mode only its live blocks cross to the token side."""
+        assert self.paged, "prefill_seq requires paged=True"
+        plen = int(prompt.shape[0])
+        self.seq_prompt_len[rid] = plen
+        self.seq_len[rid] = plen
+        token_ids = [int(t) for t in prompt]
+        for w in self.prompt_group:      # re-prefill after rollback-to-0
+            if rid in w.pool.tables:
+                w.free_paged_seq(rid)
+        x = jnp.asarray(prompt)[None]
+        for w in self.prompt_group:
+            x, _ = w.prefill_paged(rid, x, token_ids=token_ids)
+        logits = x
+        if self.mode == "disaggregated":
+            self._stream_prompt_blocks(rid, plen)
+        if self.replication:
+            self._replicate_paged(rid, step=0)
+        if self.swapping:
+            for w in self.token_group:
+                w.paged_offload(rid)
+        self._track_kv_peak()
+        return logits
+
+    def _stream_prompt_blocks(self, rid: int, plen: int) -> None:
+        topo_p = PipelineTopo(len(self.prompt_group), self.cfg.num_layers, 1)
+        topo_t = PipelineTopo(len(self.token_group), self.cfg.num_layers, 1)
+        dst_stores = {i: w.cache.host for i, w in enumerate(self.token_group)}
+        for si, w in enumerate(self.prompt_group):
+            stream_out_blocks(w.live_blocks(rid), si, topo_p, topo_t,
+                              dst_stores, self.net, seq=rid)
+            w.free_paged_seq(rid)
+        for di, w in enumerate(self.token_group):
+            blocks = stream_in_blocks(w.cache.host, di, topo_t, topo_p,
+                                      self.net, seq=rid)
+            w.install_blocks(rid, plen, blocks)
+
+    def decode_seq(self, rid: int, token: jnp.ndarray, step: int) -> jnp.ndarray:
+        """One decode step for one sequence through the token pipeline.
+        Raises PoolExhausted BEFORE mutating any pool, so the engine can
+        preempt a victim and retry."""
+        pos = self.seq_len[rid]
+        if self.swapping:
+            for w in self.token_group:
+                w.paged_restore(rid)
+        for w in self.token_group:
+            if w.pool.append_needs_block(rid) and w.pool.num_free() == 0:
+                raise PoolExhausted(f"worker {w.wid} pool full (seq {rid})")
+        x = token
+        for w in self.token_group:
+            x = w.decode_paged(rid, x, pos)
+        self.seq_len[rid] = pos + 1
+        if self.replication:
+            self._replicate_paged(rid, step=step, pos=pos)
+        if self.swapping:
+            for w in self.token_group:
+                w.paged_offload(rid)
+        for w in set(self.prompt_group + self.token_group):
+            w.heartbeat()
+        self._track_kv_peak()
+        return x
+
+    def _replicate_paged(self, rid: int, step: int,
+                         pos: Optional[int] = None) -> None:
+        """Ring-replicate at BLOCK granularity: prefill pushes every live
+        block, a decode step pushes only the block it touched."""
+        group = self.token_group
+        n = len(group)
+        for i, w in enumerate(group):
+            if rid not in w.pool.tables:
+                continue
+            peer = group[(i + 1) % n]
+            if pos is None:
+                for j, arrays in w.live_blocks(rid).items():
+                    w.cache.replicate_block_to(peer.cache, rid, j, arrays,
+                                               step, self.controller.ack_replication)
+            else:
+                j, arrays = w.touched_block(rid, pos)
+                w.cache.replicate_block_to(peer.cache, rid, j, arrays, step,
+                                           self.controller.ack_replication)
+        self.streamer.drain()
+
+    def preempt_seq(self, rid: int) -> None:
+        """Swap a running sequence fully out (block-granular) to free pool
+        space for another request; `resume_seq` brings it back.  Offload is
+        a no-op on workers where the sequence is already swapped out."""
+        for w in self.token_group:
+            w.paged_offload(rid)
+
+    def resident_blocks(self, rid: int) -> int:
+        """Device-resident blocks a preemption of `rid` would free."""
+        return sum(len(w.pool.tables.get(rid, ())) for w in self.token_group)
+
+    def can_resume(self, rid: int, n_active: int) -> bool:
+        need = blocks_for(self.seq_len[rid] + 1, self.kv_block_size) + n_active
+        return all(w.pool.num_free() >= need for w in self.token_group)
+
+    def resume_seq(self, rid: int) -> None:
+        for w in self.token_group:
+            w.paged_restore(rid)
+
+    def free_seq(self, rid: int) -> None:
+        """Retire a finished sequence: blocks return to the pool immediately
+        (this is what lets the engine admit queued work every step)."""
+        for w in set(self.prompt_group + self.token_group):
+            w.free_paged_seq(rid)
+            for key in [k for k in w.cache.replica.keys()
+                        if f"/seq{rid}/" in k]:
+                w.cache.replica.delete(key)
+        self.seq_len.pop(rid, None)
+        self.seq_prompt_len.pop(rid, None)
+
+    def pool_stats(self) -> Dict[str, int]:
+        used = max((w.pool.num_used() for w in self.token_group), default=0)
+        peak = max((w.pool.peak_used_blocks for w in self.token_group), default=0)
+        return {"used_blocks": used, "peak_blocks": peak,
+                "peak_kv_bytes": self.kv_bytes_peak}
 
     def _replicate(self, mb: int, token_range, step: int,
                    group: List[StageWorker]) -> None:
@@ -220,6 +379,8 @@ class DejaVuCluster:
                                    for w in self.controller.workers]
         succ = group[(idx + 1) % n]
         pred = group[(idx - 1) % n]
+        if self.paged:
+            return self._recover_worker_paged(wid, neww, succ, pred, active_mbs)
         # step 1: successor returns the failed worker's replica
         for mb in active_mbs:
             arrays = {}
@@ -251,6 +412,60 @@ class DejaVuCluster:
         self.controller.log_event("recovery", wid=wid, resume=dict(resume))
         return resume
 
+    def _recover_worker_paged(self, wid: int, neww: StageWorker,
+                              succ: StageWorker, pred: StageWorker,
+                              active: List[int]) -> Dict[int, int]:
+        """Paged 4-step recovery: only LIVE blocks move.  The successor
+        returns the failed stage's replica blocks, the predecessor re-streams
+        its own blocks, and every sequence rolls back to its last fully
+        replicated step."""
+        neww.enable_paging(self.kv_pool_blocks, self.kv_block_size)
+        bs = self.kv_block_size
+        # step 1: successor returns the failed worker's replica blocks
+        for rid in active:
+            rep = self.controller.replicated_step(wid, rid)
+            if rep < 0:
+                continue            # nothing replicated: engine re-prefills
+            avail = self.seq_prompt_len[rid] + max(rep, 0)
+            keep = blocks_for(avail, bs)
+            blocks = {j: a for j, a in succ.cache.replica_blocks(wid, rid).items()
+                      if j < keep}
+            neww.install_blocks(rid, avail, blocks)
+            # a swapped/preempted sequence goes back to host on the fresh
+            # worker too, so recovery leaves residency exactly as it found it
+            if self.swapping or rid in pred.paged_swapped:
+                neww.paged_offload(rid)
+        # step 2: predecessor re-replicates its own live blocks; a swapped or
+        # preempted sequence is brought back for the send, then re-offloaded
+        # so pool occupancy is unchanged by recovery
+        for rid in active:
+            was_swapped = rid in pred.paged_swapped
+            pred.paged_restore(rid)
+            if rid not in pred.pool.tables:
+                continue
+            step = self.controller.replicated_step(pred.wid, rid)
+            for j, arrays in pred.live_blocks(rid).items():
+                pred.cache.replicate_block_to(neww.cache, rid, j, arrays, step,
+                                              self.controller.ack_replication)
+            if was_swapped:
+                pred.paged_offload(rid)
+        self.streamer.drain()
+        # steps 3+4: resume point per sequence; roll every pool back to it
+        resume = self.controller.resume_point(wid, active)
+        for rid, r in resume.items():
+            new_len = self.seq_prompt_len[rid] + max(r - 1, 0) if r > 0 else 0
+            self.seq_len[rid] = new_len
+            for w in self.token_group:
+                if rid in w.pool.tables:
+                    if new_len > 0:
+                        w.pool.truncate(rid, new_len)
+                    else:
+                        w.free_paged_seq(rid)
+                if rid in w.paged_swapped:
+                    w.paged_swapped[rid] = min(w.paged_swapped[rid], new_len)
+        self.controller.log_event("recovery", wid=wid, resume=dict(resume))
+        return resume
+
     def migrate_worker(self, wid: int, active_mbs: List[int]) -> Dict[int, int]:
         """Straggler mitigation: proactively move a slow stage to a fresh
         worker using the replication ring (beyond-paper, same machinery)."""
@@ -276,6 +491,27 @@ class DejaVuCluster:
                 wid0 + i, self.model, self.params, lo, hi, first=(i == 0),
                 last=(i == len(ranges) - 1),
                 role=old_group[0].role, hw=self.hw, streamer=self.streamer))
+        if self.paged:
+            for w in new_group:
+                w.enable_paging(self.kv_pool_blocks, self.kv_block_size)
+            dst_stores = {i: w.cache.host for i, w in enumerate(new_group)}
+            for rid in active_mbs:
+                for si, w in enumerate(old_group):
+                    if self.swapping:
+                        w.paged_restore(rid)
+                    stream_out_blocks(w.live_blocks(rid), si, topo_old,
+                                      topo_new, dst_stores, self.net, seq=rid)
+                for di, w in enumerate(new_group):
+                    blocks = stream_in_blocks(w.cache.host, di, topo_new,
+                                              topo_old, self.net, seq=rid)
+                    w.install_blocks(rid, self.seq_len[rid], blocks)
+            self.token_group = new_group
+            if self.mode == "colocated":
+                self.prompt_group = new_group
+            for w in new_group:
+                self.controller.register(w)
+            self.controller.log_event("repartition", depth=new_depth)
+            return
         dst_stores = {i: w.cache.host for i, w in enumerate(new_group)}
         for mb in active_mbs:
             cur = self.mb_pos[mb]

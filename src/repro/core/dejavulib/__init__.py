@@ -4,6 +4,8 @@ from repro.core.dejavulib.transport import (HardwareModel, Transport,
                                             NetworkTransport, ICITransport)
 from repro.core.dejavulib.primitives import (CacheChunk, flush, fetch, scatter,
                                              gather, stream_out, stream_in,
+                                             stream_out_blocks,
+                                             stream_in_blocks,
                                              plan_repartition, PipelineTopo)
 from repro.core.dejavulib.streamer import StreamEngine
 
@@ -11,5 +13,6 @@ __all__ = [
     "HostMemoryStore", "SSDStore", "TransferRecord", "HardwareModel",
     "Transport", "LocalTransport", "HostLinkTransport", "NetworkTransport",
     "ICITransport", "CacheChunk", "flush", "fetch", "scatter", "gather",
-    "stream_out", "stream_in", "plan_repartition", "PipelineTopo", "StreamEngine",
+    "stream_out", "stream_in", "stream_out_blocks", "stream_in_blocks",
+    "plan_repartition", "PipelineTopo", "StreamEngine",
 ]

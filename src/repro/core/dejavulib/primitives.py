@@ -219,6 +219,69 @@ def stream_out(state: Dict, src_stage: int, src_topo: PipelineTopo,
     return total
 
 
+def stream_out_blocks(block_arrays: Dict[int, Dict[str, np.ndarray]],
+                      src_stage: int, src_topo: PipelineTopo,
+                      dst_topo: PipelineTopo, dst_stores: Dict[int, "HostMemoryStore"],
+                      transport: Transport, *, seq: int | str) -> int:
+    """Block-granularity stream_out: move only LIVE paged-KV blocks.
+
+    `block_arrays`: {logical_block_idx: {"k": [Lstage,w,H,D], "v": ...}} —
+    the per-block pages of this stage's layer slice (w <= block_size tokens
+    live in the block).  Each block is split by the destination topology's
+    layer ranges and flushed under ``seq{seq}/blk{j}/l{lo}-{hi}/{leaf}``.
+    Dead/unallocated blocks never touch the wire — the contract the paper's
+    §4.1.2 scatter/gather layer makes cheap and static caches make impossible.
+    """
+    my_lo, my_hi = src_topo.layer_range(src_stage)
+    total = 0
+    for ds in range(dst_topo.depth):
+        dlo, dhi = dst_topo.layer_range(ds)
+        ov = _overlap((my_lo, my_hi), (dlo, dhi))
+        if ov is None:
+            continue
+        lo, hi = ov
+        for j, arrays in block_arrays.items():
+            for leaf, arr in arrays.items():
+                key = f"seq{seq}/blk{j}/l{lo}-{hi}/{leaf}"
+                total += flush(arr[lo - my_lo:hi - my_lo], dst_stores[ds], key,
+                               transport, n_messages=1)
+    return total
+
+
+def stream_in_blocks(store, dst_stage: int, dst_topo: PipelineTopo,
+                     src_topo: PipelineTopo, transport: Transport, *,
+                     seq: int | str, cleanup: bool = True
+                     ) -> Dict[int, Dict[str, np.ndarray]]:
+    """Reassemble this stage's slice of every streamed block of `seq`.
+
+    Inverse of `stream_out_blocks`: fetches the layer-overlap chunks landed
+    by each source stage and concatenates them into the destination stage's
+    local layer frame.  Returns {logical_block_idx: {"k": ..., "v": ...}}."""
+    my_lo, my_hi = dst_topo.layer_range(dst_stage)
+    pieces: Dict[int, Dict[str, Dict[int, np.ndarray]]] = {}
+    for ss in range(src_topo.depth):
+        slo, shi = src_topo.layer_range(ss)
+        ov = _overlap((my_lo, my_hi), (slo, shi))
+        if ov is None:
+            continue
+        lo, hi = ov
+        prefix = f"seq{seq}/blk"
+        for key in store.keys():
+            if not key.startswith(prefix) or f"/l{lo}-{hi}/" not in key:
+                continue
+            j = int(key[len(prefix):].split("/")[0])
+            leaf = key.rsplit("/", 1)[1]
+            arr = fetch(store, key, transport)
+            pieces.setdefault(j, {}).setdefault(leaf, {})[lo] = arr
+            if cleanup:
+                store.delete(key)
+    out: Dict[int, Dict[str, np.ndarray]] = {}
+    for j, leaves in pieces.items():
+        out[j] = {leaf: np.concatenate([chunks[lo] for lo in sorted(chunks)], 0)
+                  for leaf, chunks in leaves.items()}
+    return out
+
+
 def stream_in(store, dst_stage: int, dst_topo: PipelineTopo,
               src_topo: PipelineTopo, state_shapes: Dict,
               transport: Transport, *, mb: int | str = 0,

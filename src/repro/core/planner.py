@@ -54,16 +54,31 @@ class Plan:
         return self.inv_tp_colocated / self.inv_tp_disagg if self.inv_tp_disagg else 0.0
 
 
+def paged_token_kv_bytes(cfg: ArchConfig, wl: cm.WorkloadSpec,
+                         kv_util: float = 0.5) -> float:
+    """K_0 under the paged pool: continuous batching keeps only the LIVE
+    prefix of each request's growth window resident (mean occupancy
+    `kv_util` of `new_tokens`, ~0.5 for arrival-mixed traces since retired
+    requests free immediately), plus at most one partially-filled block per
+    sequence of internal fragmentation."""
+    k0 = cm.layer_token_kv_bytes(cfg, wl) * kv_util
+    slack = (0.5 * cfg.kv_block_size * cfg.kv_bytes_per_token()
+             / max(cfg.num_layers, 1) * wl.microbatch)
+    return k0 + slack
+
+
 def min_prompt_depth(cfg: ArchConfig, wl: cm.WorkloadSpec, mach: MachineSpec) -> int:
     w0 = cm.layer_param_bytes(cfg)
     c0 = cm.layer_prompt_kv_bytes(cfg, wl)
     return max(1, math.ceil(cfg.num_layers * (c0 + w0) / mach.mem_bytes))
 
 
-def min_token_depth(cfg: ArchConfig, wl: cm.WorkloadSpec, mach: MachineSpec) -> int:
+def min_token_depth(cfg: ArchConfig, wl: cm.WorkloadSpec, mach: MachineSpec,
+                    *, paged: bool = False, kv_util: float = 0.5) -> int:
     w0 = cm.layer_param_bytes(cfg)
     c0 = cm.layer_prompt_kv_bytes(cfg, wl)
-    k0 = cm.layer_token_kv_bytes(cfg, wl)
+    k0 = (paged_token_kv_bytes(cfg, wl, kv_util) if paged
+          else cm.layer_token_kv_bytes(cfg, wl))
     denom = mach.mem_bytes - cfg.num_layers * (c0 + k0)
     if denom <= 0:
         return -1  # even one stage per layer can't hold the KV — infeasible
@@ -96,7 +111,11 @@ def estimate_m(cfg: ArchConfig, wl: cm.WorkloadSpec, y_total: float, dp: int,
 
 def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
          mach: MachineSpec = MachineSpec(), hw: HardwareModel = DEFAULT_HW,
-         mfu: float = 0.5, beff: float = 0.7) -> Plan:
+         mfu: float = 0.5, beff: float = 0.7, *, paged: bool = False,
+         kv_util: float = 0.5) -> Plan:
+    """`paged=True` plans against the paged pool's live-block footprint
+    (continuous batching) instead of the static prompt+new reservation —
+    the same D often becomes feasible at larger microbatches."""
     l = cfg.num_layers
     ctx = wl.prompt_len + wl.new_tokens
     # whole-model times with all D machines (the paper's Y and t)
@@ -106,7 +125,7 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
     ic = colocated_inverse_throughput(d, y, t, n)
 
     dp_min = min_prompt_depth(cfg, wl, mach)
-    dt_min = min_token_depth(cfg, wl, mach)
+    dt_min = min_token_depth(cfg, wl, mach, paged=paged, kv_util=kv_util)
     if dt_min < 0 or dp_min + max(dt_min, 1) > d:
         return Plan(d, 0, 0, False, False, 1.0, ic, float("inf"), 0, 0,
                     note="memory-infeasible for this D")

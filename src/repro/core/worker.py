@@ -23,6 +23,8 @@ from repro.core.dejavulib import (HostMemoryStore, LocalTransport,
                                   HostLinkTransport, NetworkTransport,
                                   StreamEngine)
 from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.kvcache.paged import (BlockPool, PagedKVCache, PoolExhausted,
+                                 blocks_for)
 
 
 class CacheManager:
@@ -125,6 +127,74 @@ class CacheManager:
         self.streamer.submit(_send, model_seconds=model_s,
                              tag=f"rep-w{self.wid}-mb{mb}-s{step}")
 
+    # --- paged-mode movement (block granularity) ------------------------
+    def replicate_block_to(self, peer: "CacheManager", seq: int, j: int,
+                           arrays: Dict[str, np.ndarray], step: int,
+                           ack_cb) -> None:
+        """Stream ONE live KV block to the ring successor's replica store.
+        Only the block touched this step crosses the wire (vs the dense
+        path's token-window of a padded cache)."""
+        def _send():
+            nbytes = 0
+            for leaf, arr in arrays.items():
+                key = f"w{self.wid}/seq{seq}/blk{j}/{leaf}"
+                if self.compress_replicas:
+                    scale = max(float(np.max(np.abs(arr))), 1e-8) / 127.0
+                    q = np.clip(np.round(arr.astype(np.float32) / scale),
+                                -127, 127).astype(np.int8)
+                    sent = self.net.transfer(q, tag=key + "/int8")
+                    recv = (sent.astype(np.float32) * scale).astype(arr.dtype)
+                else:
+                    sent = self.net.transfer(arr, tag=key)
+                    recv = sent
+                peer.replica.put(key, np.array(recv))
+                nbytes += sent.nbytes
+            ack_cb(self.wid, seq, step)
+            return nbytes
+
+        raw = sum(a.nbytes for a in arrays.values())
+        model_s = self.net.model_time(raw // 2 if self.compress_replicas else raw)
+        self.streamer.submit(_send, model_seconds=model_s,
+                             tag=f"rep-w{self.wid}-seq{seq}-blk{j}-s{step}")
+
+    def replica_blocks(self, wid: int, seq: int) -> Dict[int, Dict[str, np.ndarray]]:
+        """All replica blocks this store holds for (failed worker, seq)."""
+        prefix = f"w{wid}/seq{seq}/blk"
+        out: Dict[int, Dict[str, np.ndarray]] = {}
+        for key in self.replica.keys():
+            if key.startswith(prefix):
+                j, leaf = key[len(prefix):].split("/")
+                out.setdefault(int(j), {})[leaf] = self.replica.get(key)
+        return out
+
+    def swap_out_blocks(self, seq: int,
+                        blocks: Dict[int, Dict[str, np.ndarray]]) -> int:
+        """Offload the given (dirty) blocks of `seq` to host memory."""
+        nbytes = 0
+        for j, arrays in blocks.items():
+            for leaf, arr in arrays.items():
+                key = f"pagedswap/seq{seq}/blk{j}/{leaf}"
+                buf = self.hostlink.transfer(arr, tag=key)
+                self.host.put(key, buf)
+                nbytes += buf.nbytes
+        return nbytes
+
+    def swap_in_blocks(self, seq: int) -> Dict[int, Dict[str, np.ndarray]]:
+        prefix = f"pagedswap/seq{seq}/blk"
+        out: Dict[int, Dict[str, np.ndarray]] = {}
+        for key in self.host.keys():
+            if key.startswith(prefix):
+                j, leaf = key[len(prefix):].split("/")
+                arr = self.host.get(key)
+                self.hostlink.transfer(arr, tag=key)
+                out.setdefault(int(j), {})[leaf] = arr
+        return out
+
+    def drop_seq_swap(self, seq: int) -> None:
+        for key in [k for k in self.host.keys()
+                    if k.startswith(f"pagedswap/seq{seq}/")]:
+            self.host.delete(key)
+
 
 class StageWorker:
     """One pipeline stage (a machine with `chips` accelerators running TP)."""
@@ -146,6 +216,11 @@ class StageWorker:
         self.cache = CacheManager(wid, hw, streamer or StreamEngine(f"w{wid}"),
                                   compress_replicas=compress_replicas)
         self.slow_factor = 1.0                # straggler injection knob
+        # paged mode (enable_paging): block pool + pages for this layer slice
+        self.pool: Optional[BlockPool] = None
+        self.pages: Optional[PagedKVCache] = None
+        self.paged_dirty: Dict[int, set] = {}       # seq -> dirty logical blocks
+        self.paged_swapped: Dict[int, int] = {}     # seq -> offloaded length
 
         mf = model
         if first:
@@ -214,3 +289,112 @@ class StageWorker:
 
     def install_kv(self, mb: int, arrays: Dict[str, np.ndarray]) -> None:
         self.kv[mb] = {k: jnp.asarray(v) for k, v in arrays.items()}
+
+    # ------------------------------------------------------------------
+    # paged mode: per-sequence KV in ref-counted blocks (see kvcache.paged)
+    # ------------------------------------------------------------------
+    def enable_paging(self, num_blocks: int, block_size: int) -> None:
+        cfg = self.model.cfg
+        self.pool = BlockPool(num_blocks, block_size)
+        self.pages = PagedKVCache(self.pool, layers=self.hi - self.lo,
+                                  num_kv_heads=cfg.num_kv_heads,
+                                  head_dim=cfg.resolved_head_dim,
+                                  dtype=cfg.dtype)
+
+    @property
+    def paged(self) -> bool:
+        return self.pool is not None
+
+    def prefill_paged(self, seq: int, x_or_tokens, token_ids=None):
+        """Stage prefill for ONE request (batch 1); KV lands in pool blocks.
+        `token_ids` enables prefix-sharing of full prompt blocks."""
+        self._check()
+        x, ks, vs = self._prefill(self.sp, x_or_tokens)
+        s = ks.shape[2]
+        _, fresh = self.pool.allocate(seq, s, token_ids=token_ids)
+        # shared blocks already hold identical data (same prefix, same
+        # weights); rewriting them is a no-op value-wise, so write the window
+        # once instead of per-fresh-block bookkeeping
+        self.pages.write_window(seq, {"k": np.asarray(ks[:, 0]),
+                                      "v": np.asarray(vs[:, 0])}, 0)
+        self.paged_dirty[seq] = {j for j, _, _, _ in self.pool.block_span(seq)}
+        return x, len(fresh)
+
+    def decode_paged(self, seq: int, x_or_token, pos: int):
+        """One decode step for one sequence: append a slot (CoW if the tail
+        block is shared), gather blocks -> dense stage cache, run the jitted
+        stage, scatter the new token's K/V back into its block."""
+        self._check()
+        cow = self.pool.append(seq)
+        self.pages.apply_cow(cow)
+        pad_to = len(self.pool.tables[seq]) * self.pool.block_size
+        dense = self.pages.gather_dense(seq, pad_to)
+        x, kc, vc = self._decode(self.sp, x_or_token, jnp.asarray(dense["k"]),
+                                 jnp.asarray(dense["v"]), jnp.int32(pos))
+        win = {"k": np.asarray(kc[:, 0, pos:pos + 1]),
+               "v": np.asarray(vc[:, 0, pos:pos + 1])}
+        self.pages.write_window(seq, win, pos)
+        self.paged_dirty.setdefault(seq, set()).add(pos // self.pool.block_size)
+        return x
+
+    def touched_block(self, seq: int, pos: int):
+        """(logical_idx, arrays) of the block holding token `pos`."""
+        j = pos // self.pool.block_size
+        _, bid, t0, t1 = next(sp for sp in self.pool.block_span(seq)
+                              if sp[0] == j)
+        return j, self.pages.block_arrays(bid, width=t1 - t0)
+
+    def live_blocks(self, seq: int) -> Dict[int, Dict[str, np.ndarray]]:
+        return {j: self.pages.block_arrays(bid, width=t1 - t0)
+                for j, bid, t0, t1 in self.pool.block_span(seq)}
+
+    def install_blocks(self, seq: int, length: int,
+                       blocks: Dict[int, Dict[str, np.ndarray]]) -> None:
+        """(Re)build a sequence's pool entry from streamed blocks (recovery /
+        swap-in / disaggregated prompt-KV landing)."""
+        if seq in self.pool.tables:
+            self.pool.free_seq(seq)
+        table, _ = self.pool.allocate(seq, length)
+        for j, bid in enumerate(table):
+            if j in blocks:
+                self.pages.install_block(bid, blocks[j])
+        self.paged_dirty[seq] = set(blocks)
+
+    def paged_offload(self, seq: int) -> None:
+        """Swap a sequence out: only dirty blocks cross the host link, then
+        its pool blocks are freed (this is what admits more work)."""
+        if seq not in self.pool.tables:
+            return
+        dirty = self.paged_dirty.get(seq, set())
+        blocks = {j: arrs for j, arrs in self.live_blocks(seq).items()
+                  if j in dirty}
+        self.cache.swap_out_blocks(seq, blocks)
+        self.paged_swapped[seq] = self.pool.seq_lens[seq]
+        self.pool.free_seq(seq)
+        self.paged_dirty[seq] = set()
+
+    def paged_restore(self, seq: int) -> None:
+        if seq in self.pool.tables or seq not in self.paged_swapped:
+            return
+        length = self.paged_swapped[seq]
+        # capacity check BEFORE any state mutation, so a failed restore is
+        # retryable (the engine preempts a victim and calls again)
+        if self.pool.num_free() < blocks_for(length, self.pool.block_size):
+            raise PoolExhausted(
+                f"worker {self.wid}: cannot restore seq {seq} "
+                f"({blocks_for(length, self.pool.block_size)} blocks needed, "
+                f"{self.pool.num_free()} free)")
+        del self.paged_swapped[seq]
+        blocks = self.cache.swap_in_blocks(seq)
+        # clip: the host copy may extend past a rolled-back length
+        keep = blocks_for(length, self.pool.block_size)
+        self.install_blocks(seq, length,
+                            {j: a for j, a in blocks.items() if j < keep})
+        self.paged_dirty[seq] = set()
+
+    def free_paged_seq(self, seq: int) -> None:
+        if self.pool is not None and seq in self.pool.tables:
+            self.pool.free_seq(seq)
+        self.paged_swapped.pop(seq, None)
+        self.paged_dirty.pop(seq, None)
+        self.cache.drop_seq_swap(seq)

@@ -52,6 +52,82 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0, :, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale, block_size):
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)            # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # [G, bs]
+    # slot j of logical block ik holds token ik*bs + j; valid iff < seq length
+    g = s.shape[0]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (g, block_size), 1)
+    valid = ik * block_size + slot < len_ref[bi]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0, :, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           interpret: bool = True):
+    """Decode attention over a paged KV cache (block-table gather).
+
+    q: [B,Hq,D]; k_pages/v_pages: [N,bs,Hkv,D] (shared page pool);
+    block_tables: [B,max_blocks] int32 — logical block j of sequence b lives
+    in page block_tables[b,j] (pad unused tail entries with any valid page id,
+    conventionally 0); lengths: [B] int32 live token counts.  -> [B,Hq,D].
+
+    The tables + lengths ride scalar prefetch so each (b, h, j) grid step
+    DMAs exactly one page — the gather never materializes a dense cache.
+    """
+    b, hq, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    g = hq // hkv
+    max_blocks = block_tables.shape[1]
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, max_blocks)
+
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda bi, h, ik, bt, ln: (bi, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, bs, 1, d),
+                           lambda bi, h, ik, bt, ln: (bt[bi, ik], 0, h, 0))
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=d ** -0.5, block_size=bs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2, grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, h, ik, bt, ln: (bi, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(b, hq, d)
+
+
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k, v, kv_valid, *, block_k: int = 512, interpret: bool = True):
     """q: [B,Hq,D]; k/v: [B,S,Hkv,D]; kv_valid: [S] bool -> [B,Hq,D]."""

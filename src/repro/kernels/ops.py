@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import decode_attention, paged_decode_attention
 from repro.kernels.kv_pack import kv_pack, kv_unpack
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -42,6 +42,16 @@ def decode_attention_auto(q, k_cache, v_cache, mask):
     valid = mask[0] if mask.ndim == 2 else mask
     out = decode_attention(q[:, 0], k_cache, v_cache, valid, interpret=INTERPRET)
     return out[:, None]
+
+
+def paged_decode_attention_auto(q, k_pages, v_pages, block_tables, lengths):
+    """Paged decode attention entry point.  q: [B,1,Hq,D] or [B,Hq,D]."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    out = paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                                 interpret=INTERPRET)
+    return out[:, None] if squeeze else out
 
 
 def ssd_auto(x, dt, a_neg, bmat, cmat, chunk=128, h0=None):

@@ -58,6 +58,36 @@ def decode_attention_ref(q, k, v, kv_valid):
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention (block-table gather over a shared page pool)
+# ---------------------------------------------------------------------------
+
+def paged_gather_ref(pages, block_tables):
+    """pages: [N,bs,H,D]; block_tables: [B,max_blocks] -> dense [B,S,H,D]."""
+    b, mb = block_tables.shape
+    _, bs, h, d = pages.shape
+    gathered = jnp.take(pages, block_tables.reshape(-1), axis=0)
+    return gathered.reshape(b, mb * bs, h, d)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """q: [B,Hq,D]; k/v_pages: [N,bs,Hkv,D]; block_tables: [B,max_blocks];
+    lengths: [B] -> [B,Hq,D].  Gathers pages dense, then masked softmax."""
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    k = paged_gather_ref(k_pages, block_tables)
+    v = paged_gather_ref(v_pages, block_tables)
+    s = k.shape[1]
+    valid = jnp.arange(s)[None, :] < lengths[:, None]          # [B,S]
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v)
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
 # SSD — sequential recurrence oracle (independent of the chunked algorithm)
 # ---------------------------------------------------------------------------
 

@@ -4,5 +4,9 @@ from repro.kvcache.cache import (
     decode_state_specs,
     state_bytes,
 )
+from repro.kvcache.paged import (Block, BlockPool, PagedKVCache, PoolExhausted,
+                                 blocks_for)
 
-__all__ = ["decode_state_shapes", "init_decode_state", "decode_state_specs", "state_bytes"]
+__all__ = ["decode_state_shapes", "init_decode_state", "decode_state_specs",
+           "state_bytes", "Block", "BlockPool", "PagedKVCache", "PoolExhausted",
+           "blocks_for"]

@@ -7,16 +7,25 @@ device XLA flag, and only before its first jax import.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                     # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:                      # jax 0.4.x: Auto is the only behavior
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_local_mesh():
     """1-device mesh with the production axis names (smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _mesh((1, 1), ("data", "model"))

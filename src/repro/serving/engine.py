@@ -1,11 +1,22 @@
-"""ServingEngine: microbatch round-robin serving loop over a DejaVuCluster.
+"""ServingEngine: serving loops over a DejaVuCluster.
 
-Mirrors the strict round-robin schedule of `core.schedule.rr_schedule`
-(FasterTransformer semantics): in-flight microbatch slots advance one step per
-round; early-stopped slots are backfilled from the queue.  Failure injection /
-detection / 4-step recovery run between steps; recovered microbatches roll
-back to their last replicated step and regenerate — with greedy sampling the
-regenerated tokens are bit-identical (asserted in tests).
+Two schedulers share the cluster, the sampler, and the failure machinery:
+
+`run` — microbatch round-robin (FasterTransformer semantics, the paper's
+setting): in-flight microbatch slots advance one step per round; a slot only
+frees when its WHOLE microbatch drains, and each microbatch holds a padded
+prompt+max_new cache for its entire lifetime.
+
+`run_continuous` — continuous batching over the paged KV pool
+(`paged=True`): requests are admitted into the running batch the moment
+blocks free up, finished sequences retire (and release their blocks)
+immediately, and a full pool preempts the youngest sequence (block-granular
+swap-out) instead of stalling.  With greedy sampling its outputs are
+bit-identical to `run`'s, which tests assert.
+
+Failure injection / detection / 4-step recovery run between steps in both
+loops; recovered work rolls back to its last replicated step and regenerates
+bit-identically.
 """
 from __future__ import annotations
 
@@ -18,8 +29,16 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.cluster import DejaVuCluster
 from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.kvcache.paged import PoolExhausted
 from repro.serving.request import Microbatch, Request, form_microbatches
 from repro.serving.sampling import greedy
+
+
+class _SingleSeq:
+    """Adapter: one request viewed as a 1-element microbatch for `_emit`."""
+
+    def __init__(self, r: Request):
+        self.requests = [r]
 
 
 @dataclass
@@ -29,6 +48,10 @@ class EngineReport:
     steps_redone: int = 0
     failures: int = 0
     recoveries: int = 0
+    preemptions: int = 0
+    peak_kv_bytes: int = 0
+    # one entry per continuous-batching round: live batch size that round
+    batch_trace: List[int] = field(default_factory=list)
     transfer_bytes: Dict[str, int] = field(default_factory=dict)
     events: List[dict] = field(default_factory=list)
 
@@ -40,6 +63,8 @@ class ServingEngine:
                  microbatch: int = 2,
                  swapping: bool = False, replication: bool = False,
                  compress_replicas: bool = False,
+                 paged: bool = False, kv_block_size: Optional[int] = None,
+                 kv_pool_blocks: Optional[int] = None,
                  hw: HardwareModel = DEFAULT_HW,
                  sampler: Callable = greedy):
         self.cfg = cfg
@@ -48,7 +73,9 @@ class ServingEngine:
         self.cluster = DejaVuCluster(cfg, model, params, n_workers, mode=mode,
                                      dp_split=dp_split, swapping=swapping,
                                      replication=replication,
-                                     compress_replicas=compress_replicas, hw=hw)
+                                     compress_replicas=compress_replicas, hw=hw,
+                                     paged=paged, kv_block_size=kv_block_size,
+                                     kv_pool_blocks=kv_pool_blocks)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -104,7 +131,139 @@ class ServingEngine:
                     self._advance(mb, report)  # re-execute this slot's step
                 if mb.done:
                     slots[q] = None
+        report.peak_kv_bytes = self.cluster.kv_bytes_peak
         return report
+
+    # ------------------------------------------------------------------
+    # continuous batching over the paged KV pool
+    # ------------------------------------------------------------------
+    def run_continuous(self, requests: List[Request], *,
+                       max_active: int = 4,
+                       fail_at: Optional[Dict[int, int]] = None) -> EngineReport:
+        """Continuous-batching loop (requires ``paged=True``).
+
+        Every round: (1) resume preempted / admit queued requests into freed
+        pool space, (2) advance EVERY live request one step, (3) retire
+        finished requests, returning their blocks.  `fail_at` counts
+        per-request steps exactly like `run`'s global steps.  Each request
+        generates exactly `max_new` tokens (or stops at eos) — unlike `run`,
+        no request is held hostage by the longest peer in its microbatch.
+        """
+        cl = self.cluster
+        assert cl.paged, "run_continuous requires ServingEngine(..., paged=True)"
+        fail_at = dict(fail_at or {})
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        active: List[Request] = []
+        preempted: List[Request] = []
+        next_step: Dict[int, int] = {r.rid: 0 for r in requests}
+        report = EngineReport(tokens={r.rid: r.tokens for r in requests})
+        self._gstep = 0
+        while queue or active or preempted:
+            # --- resume preempted, then admit new, while blocks are free ---
+            while preempted and len(active) < max_active and \
+                    cl.can_resume(preempted[0].rid, len(active)):
+                r = preempted.pop(0)
+                cl.resume_seq(r.rid)
+                active.append(r)
+            while queue and len(active) < max_active and \
+                    cl.can_admit(queue[0].prompt_len, len(active)):
+                r = queue.pop(0)
+                self._advance_seq(r, next_step, active, preempted, report,
+                                  fail_at)
+                active.append(r)
+            if not active:
+                if not (queue or preempted):
+                    break
+                raise MemoryError("pool cannot admit any request — "
+                                  "kv_pool_blocks too small for this trace")
+            # --- one decode step for every live request ---------------------
+            report.batch_trace.append(len(active))
+            for r in list(active):
+                if r.rid not in [a.rid for a in active]:
+                    continue        # dropped by a mid-round preemption
+                if next_step[r.rid] >= r.max_new or r.done:
+                    continue        # budget spent at admission (or eos'd)
+                while True:
+                    try:
+                        self._advance_seq(r, next_step, active, preempted,
+                                          report, fail_at)
+                        break
+                    except PoolExhausted:
+                        # only a sequence with device-resident blocks frees
+                        # anything (under swapping they are all offloaded
+                        # between steps and preemption cannot help)
+                        victim = next(
+                            (v for v in reversed(active) if v is not r
+                             and cl.resident_blocks(v.rid) > 0), None)
+                        if victim is None:
+                            raise
+                        cl.preempt_seq(victim.rid)
+                        active.remove(victim)
+                        preempted.append(victim)
+                        report.preemptions += 1
+            # --- retire finished sequences (blocks free immediately) --------
+            for r in list(active):
+                if next_step[r.rid] >= r.max_new or r.done:
+                    r.done = True
+                    cl.free_seq(r.rid)
+                    active.remove(r)
+        report.peak_kv_bytes = cl.kv_bytes_peak
+        return report
+
+    def _advance_seq(self, r: Request, next_step: Dict[int, int],
+                     active: List[Request], preempted: List[Request],
+                     report: EngineReport, fail_at: Dict[int, int]) -> None:
+        """One per-request step (prefill if next_step==0, else decode), with
+        the same failure-injection / detect-recover contract as `_advance`.
+        Preempted sequences join the recovery set: their swap copies on the
+        failed worker die with it, so they too must rebuild from replicas
+        and roll back."""
+        cl = self.cluster
+        self._gstep += 1
+        if self._gstep in fail_at:
+            cl.inject_failure(fail_at.pop(self._gstep))
+            report.failures += 1
+        covered = active + preempted
+        live = [a.rid for a in covered if not a.done]
+        if r.rid not in live:
+            live.append(r.rid)
+        try:
+            self._step_seq(r, next_step, report)
+        except RuntimeError:
+            resume = cl.detect_and_recover(live)
+            report.recoveries += 1
+            self._apply_resume_seqs(resume, covered + [r], next_step, report)
+            self._step_seq(r, next_step, report)
+
+    def _step_seq(self, r: Request, next_step: Dict[int, int],
+                  report: EngineReport) -> None:
+        cl = self.cluster
+        i = next_step[r.rid]
+        if i == 0:
+            logits = cl.prefill_seq(r.rid, r.prompt, r.max_new)
+            tok = self.sampler(logits, 0)
+        else:
+            last = np.asarray([r.tokens[i - 1]], np.int32)
+            logits = cl.decode_seq(r.rid, jnp.asarray(last), i)
+            tok = self.sampler(logits, i)
+        self._emit(_SingleSeq(r), tok, i)
+        next_step[r.rid] = i + 1
+        report.steps_executed += 1
+
+    def _apply_resume_seqs(self, resume: Dict[int, int],
+                           requests: List[Request],
+                           next_step: Dict[int, int],
+                           report: EngineReport) -> None:
+        seen = set()
+        for r in requests:
+            if r.rid in seen or r.rid not in resume:
+                continue
+            seen.add(r.rid)
+            rr = max(resume[r.rid], 0)
+            redone = max(0, next_step[r.rid] - rr)
+            report.steps_redone += redone
+            next_step[r.rid] = min(next_step[r.rid], rr)
+            del r.tokens[next_step[r.rid]:]
 
     # ------------------------------------------------------------------
     def _advance(self, mb: Microbatch, report: EngineReport) -> None:

@@ -39,13 +39,23 @@ class Microbatch:
 
 
 def form_microbatches(requests: List[Request], size: int) -> List[Microbatch]:
-    """Group fixed-size microbatches; prompts inside one microbatch must share
-    a length (the paper's setting — fixed prompt size per experiment)."""
+    """Group fixed-size, length-homogeneous microbatches.
+
+    Prompts inside one microbatch must share a length (the paper's setting —
+    fixed prompt size per experiment), so a mixed-length trace is bucketed by
+    prompt length first (arrival order preserved within a bucket; each
+    bucket's tail microbatch may be smaller than `size`)."""
+    order: List[int] = []
+    buckets = {}
+    for r in requests:
+        if r.prompt_len not in buckets:
+            order.append(r.prompt_len)
+        buckets.setdefault(r.prompt_len, []).append(r)
     mbs = []
-    for i in range(0, len(requests), size):
-        group = requests[i: i + size]
-        lens = {r.prompt_len for r in group}
-        assert len(lens) == 1, "prompts within a microbatch must share length"
-        mbs.append(Microbatch(mb=len(mbs), requests=group,
-                              n_new=max(r.max_new for r in group)))
+    for plen in order:
+        bucket = buckets[plen]
+        for i in range(0, len(bucket), size):
+            group = bucket[i: i + size]
+            mbs.append(Microbatch(mb=len(mbs), requests=group,
+                                  n_new=max(r.max_new for r in group)))
     return mbs

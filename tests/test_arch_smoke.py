@@ -15,6 +15,8 @@ from repro.configs import ARCHS, get_arch
 from repro.configs.registry import PAPER_ARCHS
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # full sweep; excluded from `pytest -m "not slow"`
+
 ALL_ARCHS = sorted(ARCHS) + sorted(PAPER_ARCHS)
 
 

@@ -2,6 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dejavulib import (HostMemoryStore, SSDStore, LocalTransport,

@@ -10,6 +10,8 @@ from repro.launch.specs import input_specs
 from repro.kvcache.cache import decode_state_shapes
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # full sweep; excluded from `pytest -m "not slow"`
+
 CELLS = [(a, s) for a in sorted(ARCHS) for s in SHAPES]
 
 

@@ -11,6 +11,8 @@ from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels import ref
 from repro.models.ssm import ssd_chunked
 
+pytestmark = pytest.mark.slow  # full sweep; excluded from `pytest -m "not slow"`
+
 KEY = jax.random.PRNGKey(0)
 
 

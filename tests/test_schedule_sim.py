@@ -1,6 +1,8 @@
 """Round-robin schedule + simulator invariants (hypothesis property tests)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import PAPER_ARCHS

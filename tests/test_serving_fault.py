@@ -11,6 +11,8 @@ from repro.configs.registry import PAPER_ARCHS
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
 
+pytestmark = pytest.mark.slow  # full sweep; excluded from `pytest -m "not slow"`
+
 CFG = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
                           dtype="float32", num_layers=8)
 MODEL = build_model(CFG)

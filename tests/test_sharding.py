@@ -57,7 +57,12 @@ def test_jit_under_local_mesh_with_rules():
     b_sh = batch_shardings(
         jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch),
         cfg, mesh)
-    with jax.set_mesh(mesh):
+    # jax >= 0.5 wants an explicit mesh context; 0.4.x has no jax.set_mesh and
+    # NamedSharding already carries the mesh, so the context is optional
+    import contextlib
+    set_mesh = getattr(jax, "set_mesh", None)
+    ctx = set_mesh(mesh) if set_mesh is not None else contextlib.nullcontext()
+    with ctx:
         loss = jax.jit(model.loss, in_shardings=(sh, b_sh))(params, batch)
     assert bool(jnp.isfinite(loss))
 

@@ -53,6 +53,7 @@ def test_claim3_failure_recovery_latency():
     assert bl["slowdown"] / dv["slowdown"] > 1.3   # paper: 1.54× latency cut
 
 
+@pytest.mark.slow
 def test_full_system_smoke_all_features():
     """One run with disaggregation + swapping + replication + failure."""
     cfg = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHS
@@ -23,6 +25,7 @@ def _pipeline(batch=8, seq=32):
     return SyntheticDataPipeline(CFG.vocab_size, seq, batch, seed=1)
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     params = MODEL.init(jax.random.PRNGKey(0))
     opt = adamw_init(params)
