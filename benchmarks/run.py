@@ -17,6 +17,7 @@ MODULES = [
     ("fig14_15_failures", "benchmarks.failures"),
     ("appB_planner_study", "benchmarks.planner_study"),
     ("continuous_batching", "benchmarks.continuous_batching"),
+    ("tiered_kv", "benchmarks.tiered_kv"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
 ]

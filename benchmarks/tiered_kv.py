@@ -1,0 +1,149 @@
+"""Tiered KV-cache hierarchy (HBM→host→SSD) vs the PR-1 flat pool.
+
+A shared-system-prompt trace (every request = common system prefix + unique
+tail, the dominant production pattern) is served two ways:
+
+1. *Measured* (reduced gpt2, real engine): `ServingEngine.run_continuous`
+   with the flat paged pool vs `tiered=True`.  Sequential admission
+   (`max_active=1`) isolates CROSS-REQUEST reuse: each request retires —
+   dropping its pool blocks and hash index entries — before the next one
+   arrives, so every prefix hit must be served by streaming blocks back out
+   of the host/SSD tiers.  Greedy outputs are asserted bit-identical; the
+   headline number is prefill-token savings (target ≥ 30%).  A second,
+   host-starved run (tier-1 capacity 1 block) forces the same hits through
+   SSD promotions.  Stall/prefetch/write-behind come from the tier managers'
+   modeled accounting, and the hidden fraction from the StreamEngine
+   overlap report.
+
+2. *Modeled* (opt-66b scale): the planner's tiered terms — effective prompt
+   time under `prefix_reuse_prefill_time` at the measured hit rate, and the
+   token-depth relief from `tiered_token_kv_bytes` (host/SSD absorb the
+   cold tail of the live KV).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.dejavulib.transport import DEFAULT_HW
+from repro.core.planner import MachineSpec, TierSpec, min_token_depth, plan
+
+from benchmarks.common import emit
+
+N_REQUESTS = 8
+SYS_PROMPT_LEN = 24        # shared system prefix (3 full 8-token blocks)
+TAIL_LEN = 8               # unique per-request suffix
+MAX_NEW = 6
+
+
+def _trace(cfg, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, (SYS_PROMPT_LEN,)).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, cfg.vocab_size,
+                                            (TAIL_LEN,)).astype(np.int32)])
+               for _ in range(N_REQUESTS)]
+    return prompts
+
+
+def measured_study():
+    import jax
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    cfg = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
+                              dtype="float32", num_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _trace(cfg)
+
+    def mkreqs():
+        return [Request(rid=i, prompt=p.copy(), max_new=MAX_NEW)
+                for i, p in enumerate(prompts)]
+
+    base = ServingEngine(cfg, model, params, 2, paged=True, kv_pool_blocks=128)
+    rb = base.run_continuous(mkreqs(), max_active=1)
+
+    tier = ServingEngine(cfg, model, params, 2, paged=True, tiered=True,
+                         kv_pool_blocks=128, host_cache_blocks=16,
+                         ssd_cache_blocks=64)
+    rt = tier.run_continuous(mkreqs(), max_active=1)
+
+    assert rb.tokens == rt.tokens, "tiered outputs diverged from baseline"
+    saved_frac = rt.prefill_tokens_saved / rt.prefill_tokens_total
+    ts = rt.tier_stats
+    hit_blocks = ts.get("host_hits", 0) + ts.get("ssd_hits", 0)
+    miss_blocks = ts.get("demotions", 0)     # every demoted block was a miss once
+    hit_rate = hit_blocks / max(hit_blocks + miss_blocks, 1)
+    overlap = tier.cluster.streamer.overlap_report()
+    emit("tiered_prefill_tokens_saved", 0.0,
+         f"{rt.prefill_tokens_saved}/{rt.prefill_tokens_total} "
+         f"({saved_frac:.0%})")
+    emit("tiered_prefix_block_hit_rate", 0.0, f"{hit_rate:.0%}")
+    emit("tiered_stall_model_us", 0.0, f"{ts.get('stall_model_s', 0) * 1e6:.1f}")
+    emit("tiered_prefetch_model_us", 0.0,
+         f"{ts.get('prefetch_model_s', 0) * 1e6:.1f}")
+    emit("tiered_stream_hidden_fraction", 0.0,
+         f"{overlap['hidden_s'] / overlap['stream_s']:.0%}"
+         if overlap["stream_s"] else "n/a")
+    emit("tiered_transfer_bytes", 0.0,
+         str({k: v for k, v in sorted(tier.transfer_summary().items()) if v}))
+
+    # host-starved variant: tier 1 holds one block, so reuse must promote
+    # through SSD — same tokens, same savings, deeper stalls
+    ssd_eng = ServingEngine(cfg, model, params, 2, paged=True, tiered=True,
+                            kv_pool_blocks=128, host_cache_blocks=1,
+                            ssd_cache_blocks=64)
+    rs = ssd_eng.run_continuous(mkreqs(), max_active=1)
+    assert rb.tokens == rs.tokens, "SSD-tier outputs diverged from baseline"
+    assert rs.tier_stats.get("ssd_hits", 0) > 0, "expected SSD promotions"
+    emit("tiered_ssd_hits_host_starved", 0.0,
+         f"{rs.tier_stats['ssd_hits']:.0f} blocks "
+         f"(spills={rs.tier_stats.get('spills', 0):.0f})")
+    return saved_frac, hit_rate
+
+
+def modeled_study(hit_rate: float):
+    cfg = PAPER_ARCHS["opt-66b"]
+    mach = MachineSpec()
+    d = 8
+    tiers = TierSpec(host_blocks=4096, ssd_blocks=16384)
+    # prompt-bound regime (long shared contexts, short answers — the RAG /
+    # system-prompt serving pattern): here I_p binds, so replacing prefill
+    # compute with stage-parallel block promotion moves the bottleneck
+    wl_p = cm.WorkloadSpec(prompt_len=3000, new_tokens=32, microbatch=8)
+    flat = plan(cfg, wl_p, d, mach, paged=True)
+    tiered = plan(cfg, wl_p, d, mach, paged=True, tiers=tiers,
+                  prefix_hit_rate=hit_rate, prefix_src_tier=1)
+    emit("tiered_modeled_inv_tp_flat_s", 0.0, f"{flat.inv_tp_disagg:.3f}")
+    emit("tiered_modeled_inv_tp_tiered_s", 0.0, f"{tiered.inv_tp_disagg:.3f}")
+    if tiered.inv_tp_disagg and tiered.inv_tp_disagg != float("inf"):
+        emit("tiered_modeled_throughput_ratio", 0.0,
+             f"{flat.inv_tp_disagg / tiered.inv_tp_disagg:.2f}x")
+    # memory axis: host/SSD-backed capacity shrinks the token-side HBM
+    # requirement (Eq. 2's K_0 -> hot working set) at a KV-heavy workload
+    wl_m = cm.WorkloadSpec(prompt_len=200, new_tokens=2000, microbatch=32)
+    dt_flat = min_token_depth(cfg, wl_m, mach, paged=True)
+    dt_tier = min_token_depth(cfg, wl_m, mach, paged=True, tiers=tiers)
+    emit("tiered_modeled_min_token_depth", 0.0,
+         f"{dt_flat} flat -> {dt_tier} tiered")
+    emit("tiered_modeled_promotion_ms_host", 0.0,
+         f"{cm.promotion_time(cfg, 1, 1) * 1e3:.2f}")
+    emit("tiered_modeled_promotion_ms_ssd", 0.0,
+         f"{cm.promotion_time(cfg, 1, 2) * 1e3:.2f}")
+    assert dt_tier <= dt_flat or dt_flat < 0
+
+
+def run() -> None:
+    saved_frac, hit_rate = measured_study()
+    assert saved_frac >= 0.30, (
+        f"cross-request prefix reuse saved only {saved_frac:.0%} of prefill "
+        f"tokens (< 30%)")
+    modeled_study(hit_rate)
+
+
+if __name__ == "__main__":
+    run()

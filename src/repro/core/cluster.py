@@ -8,6 +8,7 @@ actual tokens while benchmarks read the modeled transfer timelines.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -15,13 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
 from repro.core.controller import Controller
 from repro.core.dejavulib import (PipelineTopo, StreamEngine, NetworkTransport,
                                   stream_in, stream_out, stream_in_blocks,
                                   stream_out_blocks)
 from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
 from repro.core.worker import StageWorker
-from repro.kvcache.paged import PoolExhausted, blocks_for
+from repro.kvcache.paged import BlockPool, PoolExhausted, blocks_for
+from repro.kvcache.tiers import TierConfig
 
 
 def _stage_ranges(num_layers: int, depth: int) -> List[Tuple[int, int]]:
@@ -37,10 +40,15 @@ class DejaVuCluster:
                  compress_replicas: bool = False,
                  max_resident: int = 2, hw: HardwareModel = DEFAULT_HW,
                  paged: bool = False, kv_block_size: Optional[int] = None,
-                 kv_pool_blocks: Optional[int] = None):
+                 kv_pool_blocks: Optional[int] = None,
+                 tiered: bool = False,
+                 host_cache_blocks: Optional[int] = None,
+                 ssd_cache_blocks: Optional[int] = None):
         assert mode in ("colocated", "disaggregated")
         if mode == "disaggregated":
             assert dp_split is not None and sum(dp_split) == n_workers
+        if tiered:
+            assert paged, "tiered=True requires paged=True"
         self.cfg = cfg
         self.model = model
         self.params = params             # full weights (the checkpoint store)
@@ -51,6 +59,9 @@ class DejaVuCluster:
         self.max_resident = max_resident
         self.hw = hw
         self.paged = paged
+        self.tiered = tiered
+        self.tier_cfg = TierConfig(host_capacity_blocks=host_cache_blocks,
+                                   ssd_capacity_blocks=ssd_cache_blocks)
         self.kv_block_size = kv_block_size or cfg.kv_block_size
         self.kv_pool_blocks = kv_pool_blocks or cfg.kv_pool_blocks or 512
         self.streamer = StreamEngine("cluster")
@@ -68,6 +79,8 @@ class DejaVuCluster:
             self.controller.register(w)
             if paged:
                 w.enable_paging(self.kv_pool_blocks, self.kv_block_size)
+                if tiered:
+                    w.enable_tiering(self.tier_cfg)
         self.mb_pos: Dict[int, int] = {}        # current KV length per microbatch
         self.mb_prompt_len: Dict[int, int] = {}
         self.mb_max_len: Dict[int, int] = {}
@@ -75,7 +88,12 @@ class DejaVuCluster:
         # paged (per-sequence) bookkeeping
         self.seq_len: Dict[int, int] = {}       # live tokens per sequence
         self.seq_prompt_len: Dict[int, int] = {}
+        self.seq_hashes: Dict[int, List[int]] = {}   # prompt prefix chain
         self.kv_bytes_peak = 0
+        # cross-request prefix-reuse accounting (tiered mode)
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
+        self.prefix_hit_blocks = 0
 
     # ------------------------------------------------------------------
     def live_kv_bytes(self) -> int:
@@ -186,28 +204,56 @@ class DejaVuCluster:
     # ------------------------------------------------------------------
     # paged serving primitives (continuous batching; KV moves per BLOCK)
     # ------------------------------------------------------------------
-    def can_admit(self, prompt_len: int, n_active: int) -> bool:
+    def can_admit(self, prompt_len: int, n_active: int,
+                  token_ids: Optional[np.ndarray] = None) -> bool:
         """Admission control: every token-side pool must fit the prompt plus
         one headroom block per already-running sequence (each may need a new
-        block before this request finishes its first step)."""
+        block before this request finishes its first step).
+
+        With tiering, `token_ids` lets admission count cached capacity: full
+        prompt blocks whose prefix hash is live in the pool will be
+        ref-shared, not allocated, so they need no free blocks.  (Tier-backed
+        blocks still promote INTO free blocks and are not discounted.)"""
         need = blocks_for(prompt_len + 1, self.kv_block_size) + n_active
+        if token_ids is not None and self.tiered and self.mode == "colocated":
+            # discount exactly what adoption will ref-share: the chain is
+            # capped one block short of the prompt (at least one suffix token
+            # must run through compute), so a boundary-aligned prompt's last
+            # full block is NOT shared and must not be discounted
+            hashes = BlockPool.chain_hashes(
+                [int(t) for t in token_ids],
+                self.kv_block_size)[:(prompt_len - 1) // self.kv_block_size]
+            return all(w.pool.num_free() >= need - w.pool_prefix_hits(hashes)
+                       for w in self.token_group)
         return all(w.pool.num_free() >= need for w in self.token_group)
 
     def prefill_seq(self, rid: int, prompt: np.ndarray, max_new: int) -> jnp.ndarray:
         """Prefill ONE request through the prompt pipeline into pool blocks;
-        in disaggregated mode only its live blocks cross to the token side."""
+        in disaggregated mode only its live blocks cross to the token side.
+
+        With tiering, the prompt's prefix-chain hashes are first matched
+        against live pool blocks AND the host/SSD tiers of every prompt-side
+        stage; a matching prefix is adopted (streamed back up the hierarchy)
+        and only the remaining suffix runs through compute."""
         assert self.paged, "prefill_seq requires paged=True"
         plen = int(prompt.shape[0])
         self.seq_prompt_len[rid] = plen
         self.seq_len[rid] = plen
         token_ids = [int(t) for t in prompt]
+        self.seq_hashes[rid] = BlockPool.chain_hashes(token_ids,
+                                                      self.kv_block_size)
         for w in self.prompt_group:      # re-prefill after rollback-to-0
             if rid in w.pool.tables:
                 w.free_paged_seq(rid)
-        x = jnp.asarray(prompt)[None]
-        for w in self.prompt_group:
-            x, _ = w.prefill_paged(rid, x, token_ids=token_ids)
-        logits = x
+        self.prefill_tokens_total += plen
+        khashes = self._adoptable_prefix(token_ids)
+        if khashes:
+            logits = self._prefill_adopted(rid, prompt, khashes)
+        else:
+            x = jnp.asarray(prompt)[None]
+            for w in self.prompt_group:
+                x, _ = w.prefill_paged(rid, x, token_ids=token_ids)
+            logits = x
         if self.mode == "disaggregated":
             self._stream_prompt_blocks(rid, plen)
         if self.replication:
@@ -217,6 +263,53 @@ class DejaVuCluster:
                 w.paged_offload(rid)
         self._track_kv_peak()
         return logits
+
+    def _adoptable_prefix(self, token_ids: List[int]) -> List[int]:
+        """Prefix-chain hashes (full blocks) every prompt-side stage can
+        serve from cache.  Capped so at least one suffix token runs through
+        compute (the prefill logits must come from somewhere)."""
+        if not self.tiered or self.cfg.family not in ("dense", "moe") \
+                or self.cfg.context_overhead:
+            return []
+        bs = self.kv_block_size
+        hashes = BlockPool.chain_hashes(token_ids, bs)
+        hashes = hashes[:(len(token_ids) - 1) // bs]
+        if not hashes:
+            return []
+        k = min(w.adoptable_prefix_len(hashes) for w in self.prompt_group)
+        return hashes[:k]
+
+    def _prefill_adopted(self, rid: int, prompt: np.ndarray,
+                         hashes: List[int]) -> jnp.ndarray:
+        """Skip prefill compute for an adopted prefix: its KV blocks are
+        ref-shared or promoted out of the tier hierarchy, and only the
+        suffix tokens run — token-identical to a full prefill (the decode
+        path attends over exactly the same cache), minus
+        ``len(hashes) * block_size`` tokens of prompt compute."""
+        bs = self.kv_block_size
+        start = len(hashes) * bs
+        plen = self.seq_prompt_len[rid]
+        for w in self.prompt_group:
+            w.adopt_prefix(rid, hashes, start)
+        self.prefix_hit_blocks += len(hashes)
+        self.prefill_tokens_saved += start
+        x = None
+        for pos in range(start, plen):
+            x = jnp.asarray(np.asarray(prompt[pos:pos + 1], np.int32))
+            for w in self.prompt_group:
+                x = w.decode_paged(rid, x, pos)
+        self._register_compute(plen - start, plen)
+        return x
+
+    def _register_compute(self, n_tokens: int, ctx: int) -> None:
+        """Report modeled compute time to the streamer so its overlap report
+        can say how much tier write-behind was hidden behind it."""
+        if not self.tiered or n_tokens <= 0:
+            return
+        wl = cm.WorkloadSpec(prompt_len=max(ctx, 1), new_tokens=1, microbatch=1)
+        t = cm.stage_token_time(self.cfg, wl, self.cfg.num_layers, 8,
+                                max(ctx, 1), self.hw)
+        self.streamer.compute_span(t * n_tokens)
 
     def _stream_prompt_blocks(self, rid: int, plen: int) -> None:
         topo_p = PipelineTopo(len(self.prompt_group), self.cfg.num_layers, 1)
@@ -246,6 +339,7 @@ class DejaVuCluster:
         for w in self.token_group:
             x = w.decode_paged(rid, x, pos)
         self.seq_len[rid] = pos + 1
+        self._register_compute(1, pos + 1)
         if self.replication:
             self._replicate_paged(rid, step=step, pos=pos)
         if self.swapping:
@@ -305,12 +399,28 @@ class DejaVuCluster:
                 w.cache.replica.delete(key)
         self.seq_len.pop(rid, None)
         self.seq_prompt_len.pop(rid, None)
+        self.seq_hashes.pop(rid, None)
 
     def pool_stats(self) -> Dict[str, int]:
         used = max((w.pool.num_used() for w in self.token_group), default=0)
         peak = max((w.pool.peak_used_blocks for w in self.token_group), default=0)
         return {"used_blocks": used, "peak_blocks": peak,
                 "peak_kv_bytes": self.kv_bytes_peak}
+
+    def tier_stats(self) -> Dict[str, float]:
+        """Aggregate the per-stage tier-manager counters plus the cluster's
+        prefix-reuse tallies (empty unless tiered=True)."""
+        agg: Dict[str, float] = {}
+        for w in set(self.prompt_group + self.token_group):
+            if getattr(w, "tier", None) is None:
+                continue
+            for k, v in w.tier.stats().items():
+                agg[k] = agg.get(k, 0) + v
+        if agg or self.tiered:
+            agg["prefill_tokens_total"] = self.prefill_tokens_total
+            agg["prefill_tokens_saved"] = self.prefill_tokens_saved
+            agg["prefix_hit_blocks"] = self.prefix_hit_blocks
+        return agg
 
     def _replicate(self, mb: int, token_range, step: int,
                    group: List[StageWorker]) -> None:
@@ -358,6 +468,10 @@ class DejaVuCluster:
             neww = StageWorker(wid, self.model, self.params, lo, hi,
                                first=old.first, last=old.last, role=old.role,
                                hw=self.hw, streamer=self.streamer)
+            if self.paged:
+                neww.enable_paging(self.kv_pool_blocks, self.kv_block_size)
+                if self.tiered:
+                    neww.enable_tiering(self.tier_cfg)
             self.prompt_group[idx] = neww
             self.controller.workers = [neww if w.wid == wid else w
                                        for w in self.controller.workers]
@@ -380,7 +494,8 @@ class DejaVuCluster:
         succ = group[(idx + 1) % n]
         pred = group[(idx - 1) % n]
         if self.paged:
-            return self._recover_worker_paged(wid, neww, succ, pred, active_mbs)
+            return self._recover_worker_paged(wid, old, neww, succ, pred,
+                                              active_mbs)
         # step 1: successor returns the failed worker's replica
         for mb in active_mbs:
             arrays = {}
@@ -412,25 +527,51 @@ class DejaVuCluster:
         self.controller.log_event("recovery", wid=wid, resume=dict(resume))
         return resume
 
-    def _recover_worker_paged(self, wid: int, neww: StageWorker,
+    def _recover_worker_paged(self, wid: int, old: StageWorker,
+                              neww: StageWorker,
                               succ: StageWorker, pred: StageWorker,
                               active: List[int]) -> Dict[int, int]:
-        """Paged 4-step recovery: only LIVE blocks move.  The successor
-        returns the failed stage's replica blocks, the predecessor re-streams
-        its own blocks, and every sequence rolls back to its last fully
+        """Paged 4-step recovery: only LIVE blocks move.  Each sequence is
+        restored from the LOWEST tier holding a replica: the dead worker's
+        persistent SSD tier first (it survives the machine), else the
+        successor's replica-ring blocks; the predecessor then re-streams its
+        own blocks, and every sequence rolls back to its last fully
         replicated step."""
         neww.enable_paging(self.kv_pool_blocks, self.kv_block_size)
+        if self.tiered:
+            # the dead machine's disk outlives it: point the fresh worker's
+            # tier manager at the same root and rebuild the index from the
+            # self-describing keys (prefix cache + spilled swap blocks)
+            root = old.tier.ssd.root if old.tier is not None else None
+            neww.enable_tiering(dataclasses.replace(self.tier_cfg,
+                                                    ssd_root=root))
+            self.streamer.drain()         # pending write-behinds land first
+            neww.tier.reattach()
         bs = self.kv_block_size
-        # step 1: successor returns the failed worker's replica blocks
+        # step 1: restore each sequence from the lowest tier holding it —
+        # the reattached SSD tier, else the successor's replica blocks
         for rid in active:
             rep = self.controller.replicated_step(wid, rid)
             if rep < 0:
                 continue            # nothing replicated: engine re-prefills
             avail = self.seq_prompt_len[rid] + max(rep, 0)
             keep = blocks_for(avail, bs)
-            blocks = {j: a for j, a in succ.cache.replica_blocks(wid, rid).items()
-                      if j < keep}
-            neww.install_blocks(rid, avail, blocks)
+            blocks = None
+            # the SSD copy is only authoritative if the sequence really was
+            # swapped out at (at least) the resume length — the peers'
+            # symmetric swap state is the witness for the dead worker's
+            if self.tiered and neww.tier is not None and \
+                    pred.paged_swapped.get(rid, -1) >= avail:
+                blocks = neww.tier.restore_swap_from_ssd(rid, keep)
+            if blocks is None:
+                blocks = {j: a
+                          for j, a in succ.cache.replica_blocks(wid, rid).items()
+                          if j < keep}
+            # re-share fully-restored prompt blocks with co-resident
+            # sequences — a pool that only fit its load through prefix
+            # sharing must recover through prefix sharing too
+            neww.install_blocks(rid, avail, blocks,
+                                hashes=self.seq_hashes.get(rid, [])[:avail // bs])
             # a swapped/preempted sequence goes back to host on the fresh
             # worker too, so recovery leaves residency exactly as it found it
             if self.swapping or rid in pred.paged_swapped:
@@ -494,6 +635,10 @@ class DejaVuCluster:
         if self.paged:
             for w in new_group:
                 w.enable_paging(self.kv_pool_blocks, self.kv_block_size)
+                if self.tiered:
+                    # fresh (cold) tiers: the per-stage layer slicing changed,
+                    # so the old stages' cached blocks no longer match
+                    w.enable_tiering(self.tier_cfg)
             dst_stores = {i: w.cache.host for i, w in enumerate(new_group)}
             for rid in active_mbs:
                 for si, w in enumerate(old_group):

@@ -81,3 +81,53 @@ def swap_transfer_time(cfg: ArchConfig, wl: WorkloadSpec, n_layers: int,
     nbytes = (cfg.decode_state_bytes(context_len) / max(cfg.num_layers, 1)
               * n_layers * wl.microbatch)
     return hw.transfer_latency + nbytes / hw.host_link_bw
+
+
+# ---------------------------------------------------------------------------
+# tiered KV-cache hierarchy (HBM -> host -> SSD; repro.kvcache.tiers)
+# ---------------------------------------------------------------------------
+
+def kv_block_bytes(cfg: ArchConfig, dtype_bytes: int = DTYPE_BYTES) -> float:
+    """Bytes of one whole-model KV block (`kv_block_size` token slots)."""
+    return cfg.decode_state_bytes(cfg.kv_block_size, dtype_bytes)
+
+
+def promotion_time(cfg: ArchConfig, n_blocks: float, src_tier: int,
+                   hw: HardwareModel = DEFAULT_HW) -> float:
+    """Time to bring `n_blocks` KV blocks back into HBM from `src_tier`
+    (1 = host RAM over the host link; 2 = SSD read, then the host link)."""
+    nbytes = n_blocks * kv_block_bytes(cfg)
+    t = hw.transfer_latency + nbytes / hw.host_link_bw
+    if src_tier >= 2:
+        t += hw.transfer_latency + nbytes / hw.ssd_bw
+    return t
+
+
+def write_behind_time(cfg: ArchConfig, n_blocks: float, dst_tier: int,
+                      hw: HardwareModel = DEFAULT_HW) -> float:
+    """Time to demote `n_blocks` KV blocks down to `dst_tier`.  Run as
+    write-behind on the streaming thread, this is HIDDEN whenever per-step
+    compute exceeds it (the `StreamEngine` overlap report measures the
+    remainder)."""
+    nbytes = n_blocks * kv_block_bytes(cfg)
+    t = hw.transfer_latency + nbytes / hw.host_link_bw
+    if dst_tier >= 2:
+        t += hw.transfer_latency + nbytes / hw.ssd_bw
+    return t
+
+
+def prefix_reuse_prefill_time(cfg: ArchConfig, wl: WorkloadSpec,
+                              base_y: float, hit_frac: float, src_tier: int,
+                              hw: HardwareModel = DEFAULT_HW,
+                              n_stages: int = 1) -> float:
+    """Effective prompt time when `hit_frac` of each prompt is served by
+    cross-request prefix hits: that fraction of prefill compute is replaced
+    by promoting the matching blocks.  Each of the `n_stages` pipeline
+    stages promotes only its own layer slice, concurrently over its own
+    host link.  Only the chain head's latency is truly exposed — the rest
+    prefetches behind the suffix compute — so charging the full per-stage
+    promotion time keeps this an upper bound."""
+    hit_frac = min(max(hit_frac, 0.0), 1.0)
+    n_blocks = (hit_frac * wl.prompt_len / max(cfg.kv_block_size, 1)
+                * wl.microbatch / max(n_stages, 1))
+    return base_y * (1.0 - hit_frac) + promotion_time(cfg, n_blocks, src_tier, hw)

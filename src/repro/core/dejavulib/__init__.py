@@ -1,7 +1,8 @@
 from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore, TransferRecord
 from repro.core.dejavulib.transport import (HardwareModel, Transport,
                                             LocalTransport, HostLinkTransport,
-                                            NetworkTransport, ICITransport)
+                                            NetworkTransport, ICITransport,
+                                            SSDTransport)
 from repro.core.dejavulib.primitives import (CacheChunk, flush, fetch, scatter,
                                              gather, stream_out, stream_in,
                                              stream_out_blocks,
@@ -12,7 +13,8 @@ from repro.core.dejavulib.streamer import StreamEngine
 __all__ = [
     "HostMemoryStore", "SSDStore", "TransferRecord", "HardwareModel",
     "Transport", "LocalTransport", "HostLinkTransport", "NetworkTransport",
-    "ICITransport", "CacheChunk", "flush", "fetch", "scatter", "gather",
+    "ICITransport", "SSDTransport", "CacheChunk", "flush", "fetch", "scatter",
+    "gather",
     "stream_out", "stream_in", "stream_out_blocks", "stream_in_blocks",
     "plan_repartition", "PipelineTopo", "StreamEngine",
 ]

@@ -1,17 +1,26 @@
 """Host-side buffer stores for KV-cache streaming.
 
-`HostMemoryStore` models a node's pinned CPU memory (the paper's swap /
-replication target); `SSDStore` persists to disk (the paper's "persistent
-storage" replication option) with atomic writes so a crashed writer never
-leaves a torn replica.
+`HostMemoryStore` models a node's pinned CPU memory — the paper's swap /
+replication target and tier 1 of the KV-cache hierarchy managed by
+:class:`repro.kvcache.tiers.KVTierManager`.  `SSDStore` persists to disk
+(tier 2, the paper's "persistent storage" replication option) with atomic,
+fsync'd writes so a crashed writer never leaves a torn replica.
+
+Capacity is enforced on every `put`: the store either raises
+(``on_full="raise"``, the default) or evicts least-recently-used entries
+(``on_full="evict_lru"``), handing each victim to an optional ``spill_cb``
+so a caller can demote it down-tier instead of dropping it.  (The tier
+manager plans block placement itself, one level up, and keeps the store in
+the ``"raise"`` mode as a hard backstop on its accounting.)
 """
 from __future__ import annotations
 
 import os
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -26,26 +35,61 @@ class TransferRecord:
 
 
 class HostMemoryStore:
-    """Named numpy buffer store with capacity accounting (pinned host RAM)."""
+    """Named numpy buffer store with capacity accounting (pinned host RAM).
 
-    def __init__(self, name: str = "host", capacity_bytes: Optional[int] = None):
+    ``on_full`` decides what happens when a `put` would exceed
+    ``capacity_bytes``: ``"raise"`` (MemoryError, nothing stored) or
+    ``"evict_lru"`` (oldest-touched entries are removed until the new array
+    fits; each victim is passed to ``spill_cb(key, array)`` if given, so a
+    caller can demote it to a lower tier instead of losing it)."""
+
+    def __init__(self, name: str = "host", capacity_bytes: Optional[int] = None,
+                 on_full: str = "raise",
+                 spill_cb: Optional[Callable[[str, np.ndarray], None]] = None):
+        assert on_full in ("raise", "evict_lru")
         self.name = name
         self.capacity_bytes = capacity_bytes
-        self._data: Dict[str, np.ndarray] = {}
+        self.on_full = on_full
+        self.spill_cb = spill_cb
+        self._data: "OrderedDict[str, np.ndarray]" = OrderedDict()
         self._lock = threading.Lock()
 
-    def put(self, key: str, array: np.ndarray) -> None:
+    def put(self, key: str, array: np.ndarray) -> List[Tuple[str, np.ndarray]]:
+        """Store `array` under `key`.  Returns the list of (key, array)
+        entries evicted to make room (empty unless ``on_full="evict_lru"``)."""
         arr = np.asarray(array)
+        evicted: List[Tuple[str, np.ndarray]] = []
         with self._lock:
-            new_bytes = self.used_bytes() - self._nbytes(key) + arr.nbytes
+            new_bytes = self._used_bytes_locked() - self._nbytes(key) + arr.nbytes
             if self.capacity_bytes is not None and new_bytes > self.capacity_bytes:
-                raise MemoryError(
-                    f"store {self.name!r}: {new_bytes} > capacity {self.capacity_bytes}")
+                if self.on_full == "raise":
+                    raise MemoryError(
+                        f"store {self.name!r}: {new_bytes} > capacity "
+                        f"{self.capacity_bytes}")
+                # evict_lru: shed oldest-touched entries until the put fits
+                while new_bytes > self.capacity_bytes:
+                    victim_key = next((k for k in self._data if k != key), None)
+                    if victim_key is None:
+                        break
+                    victim = self._data.pop(victim_key)
+                    evicted.append((victim_key, victim))
+                    new_bytes -= victim.nbytes
+                if new_bytes > self.capacity_bytes:
+                    raise MemoryError(
+                        f"store {self.name!r}: single array of {arr.nbytes} "
+                        f"bytes exceeds capacity {self.capacity_bytes}")
             self._data[key] = arr
+            self._data.move_to_end(key)
+        if self.spill_cb is not None:
+            for k, a in evicted:
+                self.spill_cb(k, a)
+        return evicted
 
     def get(self, key: str) -> np.ndarray:
         with self._lock:
-            return self._data[key]
+            arr = self._data[key]
+            self._data.move_to_end(key)        # LRU touch
+            return arr
 
     def pop(self, key: str) -> np.ndarray:
         with self._lock:
@@ -64,6 +108,10 @@ class HostMemoryStore:
             return key in self._data
 
     def used_bytes(self) -> int:
+        with self._lock:
+            return self._used_bytes_locked()
+
+    def _used_bytes_locked(self) -> int:
         return sum(a.nbytes for a in self._data.values())
 
     def _nbytes(self, key: str) -> int:
@@ -77,7 +125,14 @@ class HostMemoryStore:
 
 class SSDStore:
     """Disk-backed store (npy files, atomic rename).  Survives process death —
-    used for persistent KV replication and checkpoint shards."""
+    used for persistent KV replication, tier-2 spill of the KV-cache
+    hierarchy (`repro.kvcache.tiers`), and checkpoint shards.
+
+    Writes are crash-safe: bytes land in a temp file that is flushed and
+    fsync'd BEFORE the atomic ``os.replace`` publishes it, so a reader (e.g.
+    failure recovery restoring blocks from the lowest tier) can never observe
+    a torn block; a writer crash leaves at worst an orphaned ``*.tmp.*`` file
+    that `keys()` ignores."""
 
     def __init__(self, root: str, name: str = "ssd"):
         self.name = name
@@ -92,9 +147,18 @@ class SSDStore:
         path = self._path(key)
         tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
         with self._lock:
-            with open(tmp, "wb") as f:   # np.save(str) appends .npy — avoid
-                np.save(f, np.asarray(array))
-            os.replace(tmp, path)  # atomic
+            try:
+                with open(tmp, "wb") as f:   # np.save(str) appends .npy — avoid
+                    np.save(f, np.asarray(array))
+                    f.flush()
+                    os.fsync(f.fileno())     # durable before the rename publishes
+                os.replace(tmp, path)        # atomic
+            except BaseException:
+                try:
+                    os.remove(tmp)           # never leak a partial temp file
+                except FileNotFoundError:
+                    pass
+                raise
 
     def get(self, key: str) -> np.ndarray:
         return np.load(self._path(key))
@@ -107,6 +171,13 @@ class SSDStore:
 
     def __contains__(self, key: str) -> bool:
         return os.path.exists(self._path(key))
+
+    def size(self, key: str) -> int:
+        """On-disk bytes of one entry (0 if absent)."""
+        try:
+            return os.path.getsize(self._path(key))
+        except FileNotFoundError:
+            return 0
 
     def keys(self):
         return [f[:-4].replace("__", "/") for f in os.listdir(self.root)

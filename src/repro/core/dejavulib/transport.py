@@ -111,3 +111,11 @@ class NetworkTransport(Transport):
     def __init__(self, hw: HardwareModel = DEFAULT_HW,
                  bandwidth: Optional[float] = None):
         super().__init__(bandwidth or hw.dcn_stream_bw, hw.net_latency)
+
+
+class SSDTransport(Transport):
+    """Host RAM <-> local NVMe (tier-2 spill/promotion in the KV hierarchy)."""
+    kind = "ssd"
+
+    def __init__(self, hw: HardwareModel = DEFAULT_HW):
+        super().__init__(hw.ssd_bw, hw.transfer_latency)

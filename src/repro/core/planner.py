@@ -35,6 +35,17 @@ class MachineSpec:
     mem_bytes: float = 8 * 16e9      # aggregate device HBM per machine
 
 
+@dataclass(frozen=True)
+class TierSpec:
+    """Off-device KV tiers available to each token-pipeline stage (see
+    `repro.kvcache.tiers.KVTierManager`): cold blocks spill to host RAM and
+    SSD, so only a working-set fraction of the generated-token KV must stay
+    resident in HBM."""
+    host_blocks: int = 0             # host-RAM tier capacity per stage
+    ssd_blocks: int = 0              # SSD tier capacity per stage
+    min_resident_frac: float = 0.25  # working set that must stay in HBM
+
+
 @dataclass
 class Plan:
     d: int
@@ -73,12 +84,29 @@ def min_prompt_depth(cfg: ArchConfig, wl: cm.WorkloadSpec, mach: MachineSpec) ->
     return max(1, math.ceil(cfg.num_layers * (c0 + w0) / mach.mem_bytes))
 
 
+def tiered_token_kv_bytes(cfg: ArchConfig, wl: cm.WorkloadSpec,
+                          tiers: TierSpec, kv_util: float = 0.5) -> float:
+    """K_0 with the tier hierarchy behind the pool: host/SSD-backed blocks
+    absorb the cold tail of the live KV, so HBM only needs the hot working
+    set (floored at `min_resident_frac` — promotion latency makes an
+    all-cold pool useless)."""
+    k0 = paged_token_kv_bytes(cfg, wl, kv_util)
+    backed = ((tiers.host_blocks + tiers.ssd_blocks) * cm.kv_block_bytes(cfg)
+              / max(cfg.num_layers, 1))
+    return max(k0 - backed, k0 * tiers.min_resident_frac)
+
+
 def min_token_depth(cfg: ArchConfig, wl: cm.WorkloadSpec, mach: MachineSpec,
-                    *, paged: bool = False, kv_util: float = 0.5) -> int:
+                    *, paged: bool = False, kv_util: float = 0.5,
+                    tiers: Optional[TierSpec] = None) -> int:
     w0 = cm.layer_param_bytes(cfg)
     c0 = cm.layer_prompt_kv_bytes(cfg, wl)
-    k0 = (paged_token_kv_bytes(cfg, wl, kv_util) if paged
-          else cm.layer_token_kv_bytes(cfg, wl))
+    if tiers is not None:
+        k0 = tiered_token_kv_bytes(cfg, wl, tiers, kv_util)
+    elif paged:
+        k0 = paged_token_kv_bytes(cfg, wl, kv_util)
+    else:
+        k0 = cm.layer_token_kv_bytes(cfg, wl)
     denom = mach.mem_bytes - cfg.num_layers * (c0 + k0)
     if denom <= 0:
         return -1  # even one stage per layer can't hold the KV — infeasible
@@ -112,10 +140,17 @@ def estimate_m(cfg: ArchConfig, wl: cm.WorkloadSpec, y_total: float, dp: int,
 def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
          mach: MachineSpec = MachineSpec(), hw: HardwareModel = DEFAULT_HW,
          mfu: float = 0.5, beff: float = 0.7, *, paged: bool = False,
-         kv_util: float = 0.5) -> Plan:
+         kv_util: float = 0.5, tiers: Optional[TierSpec] = None,
+         prefix_hit_rate: float = 0.0, prefix_src_tier: int = 1) -> Plan:
     """`paged=True` plans against the paged pool's live-block footprint
     (continuous batching) instead of the static prompt+new reservation —
-    the same D often becomes feasible at larger microbatches."""
+    the same D often becomes feasible at larger microbatches.
+
+    `tiers` additionally credits host/SSD-backed capacity against the
+    token-side HBM requirement (Eq. 2's K_0 shrinks to the hot working set),
+    and `prefix_hit_rate` models cross-request prefix reuse: that fraction
+    of every prompt is served by promoting cached blocks from
+    `prefix_src_tier` instead of prefill compute."""
     l = cfg.num_layers
     ctx = wl.prompt_len + wl.new_tokens
     # whole-model times with all D machines (the paper's Y and t)
@@ -125,7 +160,8 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
     ic = colocated_inverse_throughput(d, y, t, n)
 
     dp_min = min_prompt_depth(cfg, wl, mach)
-    dt_min = min_token_depth(cfg, wl, mach, paged=paged, kv_util=kv_util)
+    dt_min = min_token_depth(cfg, wl, mach, paged=paged, kv_util=kv_util,
+                             tiers=tiers)
     if dt_min < 0 or dp_min + max(dt_min, 1) > d:
         return Plan(d, 0, 0, False, False, 1.0, ic, float("inf"), 0, 0,
                     note="memory-infeasible for this D")
@@ -137,6 +173,11 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
         dp = d - dt
         m = estimate_m(cfg, wl, y, dp, mach, hw)
         y_dis = y * d / dp           # fewer machines → slower prompt
+        if prefix_hit_rate > 0:
+            y_dis = cm.prefix_reuse_prefill_time(cfg, wl, y_dis,
+                                                 prefix_hit_rate,
+                                                 prefix_src_tier, hw,
+                                                 n_stages=dp)
         t_dis = t * d / dt
         # steady-state per-microbatch slot of each pipeline
         i_p = m * y_dis

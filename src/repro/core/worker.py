@@ -25,6 +25,7 @@ from repro.core.dejavulib import (HostMemoryStore, LocalTransport,
 from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
 from repro.kvcache.paged import (BlockPool, PagedKVCache, PoolExhausted,
                                  blocks_for)
+from repro.kvcache.tiers import KVTierManager, TierConfig
 
 
 class CacheManager:
@@ -210,6 +211,7 @@ class StageWorker:
         self.first, self.last = first, last
         self.role = role                      # "prompt" | "token" | "both"
         self.alive = True
+        self.hw = hw
         self.last_heartbeat = time.monotonic()
         self.sp = model.slice_params(full_params, lo, hi, first=first, last=last)
         self.kv: Dict[int, Dict[str, jax.Array]] = {}   # device-resident slots
@@ -219,6 +221,7 @@ class StageWorker:
         # paged mode (enable_paging): block pool + pages for this layer slice
         self.pool: Optional[BlockPool] = None
         self.pages: Optional[PagedKVCache] = None
+        self.tier: Optional[KVTierManager] = None   # enable_tiering
         self.paged_dirty: Dict[int, set] = {}       # seq -> dirty logical blocks
         self.paged_swapped: Dict[int, int] = {}     # seq -> offloaded length
 
@@ -241,11 +244,15 @@ class StageWorker:
         return self.alive
 
     def kill(self) -> None:
-        """Machine failure: device KV, host store, and hosted replica all die."""
+        """Machine failure: device KV, host store, and hosted replica all die.
+        The tier manager's host tier dies too; its SSD tier is disk and
+        survives (recovery reattaches it on the replacement worker)."""
         self.alive = False
         self.kv.clear()
         self.cache.host.clear()
         self.cache.replica.clear()
+        if self.tier is not None:
+            self.tier.on_host_failure()
 
     def _check(self):
         if not self.alive:
@@ -301,6 +308,16 @@ class StageWorker:
                                   head_dim=cfg.resolved_head_dim,
                                   dtype=cfg.dtype)
 
+    def enable_tiering(self, tier_cfg: TierConfig = TierConfig()) -> None:
+        """Back this stage's pool with host-RAM and SSD tiers (see
+        `repro.kvcache.tiers`): preemption swaps through the hierarchy,
+        retired prompt blocks are demoted instead of dropped, and
+        `adopt_prefix` promotes matching prefixes back for new requests."""
+        assert self.paged, "enable_tiering requires enable_paging first"
+        self.tier = KVTierManager(self.pool, self.pages, self.cache.streamer,
+                                  hw=self.hw, cfg=tier_cfg,
+                                  name=f"w{self.wid}")
+
     @property
     def paged(self) -> bool:
         return self.pool is not None
@@ -349,26 +366,38 @@ class StageWorker:
                 for j, bid, t0, t1 in self.pool.block_span(seq)}
 
     def install_blocks(self, seq: int, length: int,
-                       blocks: Dict[int, Dict[str, np.ndarray]]) -> None:
+                       blocks: Dict[int, Dict[str, np.ndarray]],
+                       hashes=None) -> None:
         """(Re)build a sequence's pool entry from streamed blocks (recovery /
-        swap-in / disaggregated prompt-KV landing)."""
+        swap-in / disaggregated prompt-KV landing).  With `hashes` (the
+        sequence's prompt prefix chain) full prompt blocks already live in
+        the pool are ref-shared instead of re-installed, so a recovered pool
+        fits everything the failed one held."""
         if seq in self.pool.tables:
             self.pool.free_seq(seq)
-        table, _ = self.pool.allocate(seq, length)
+        table, fresh = self.pool.allocate(seq, length, hashes=hashes)
+        fresh_set = set(fresh)
         for j, bid in enumerate(table):
-            if j in blocks:
+            if j in blocks and j in fresh_set:
                 self.pages.install_block(bid, blocks[j])
-        self.paged_dirty[seq] = set(blocks)
+        # shared blocks hold live data too: they must survive an offload
+        self.paged_dirty[seq] = set(blocks) | (set(range(len(table)))
+                                               - fresh_set)
 
     def paged_offload(self, seq: int) -> None:
         """Swap a sequence out: only dirty blocks cross the host link, then
-        its pool blocks are freed (this is what admits more work)."""
+        its pool blocks are freed (this is what admits more work).  With
+        tiering enabled, the blocks enter the HBM→host→SSD hierarchy as
+        write-behind instead of a plain host put."""
         if seq not in self.pool.tables:
             return
         dirty = self.paged_dirty.get(seq, set())
         blocks = {j: arrs for j, arrs in self.live_blocks(seq).items()
                   if j in dirty}
-        self.cache.swap_out_blocks(seq, blocks)
+        if self.tier is not None:
+            self.tier.swap_out_blocks(seq, blocks)
+        else:
+            self.cache.swap_out_blocks(seq, blocks)
         self.paged_swapped[seq] = self.pool.seq_lens[seq]
         self.pool.free_seq(seq)
         self.paged_dirty[seq] = set()
@@ -385,16 +414,73 @@ class StageWorker:
                 f"({blocks_for(length, self.pool.block_size)} blocks needed, "
                 f"{self.pool.num_free()} free)")
         del self.paged_swapped[seq]
-        blocks = self.cache.swap_in_blocks(seq)
-        # clip: the host copy may extend past a rolled-back length
+        blocks = (self.tier.swap_in_blocks(seq) if self.tier is not None
+                  else self.cache.swap_in_blocks(seq))
+        # clip: the held copy may extend past a rolled-back length
         keep = blocks_for(length, self.pool.block_size)
         self.install_blocks(seq, length,
                             {j: a for j, a in blocks.items() if j < keep})
         self.paged_dirty[seq] = set()
 
     def free_paged_seq(self, seq: int) -> None:
+        """Retire a sequence.  With tiering, its hashed full prompt blocks
+        are demoted into the prefix cache (write-behind) before the pool
+        frees them — the seed of cross-request prefix reuse."""
         if self.pool is not None and seq in self.pool.tables:
+            if self.tier is not None:
+                self._demote_prefix_blocks(seq)
             self.pool.free_seq(seq)
         self.paged_swapped.pop(seq, None)
         self.paged_dirty.pop(seq, None)
+        if self.tier is not None:
+            self.tier.drop_seq(seq)
         self.cache.drop_seq_swap(seq)
+
+    def _demote_prefix_blocks(self, seq: int) -> None:
+        for j, bid, t0, t1 in self.pool.block_span(seq):
+            h = self.pool.blocks[bid].hash
+            if h is not None and not self.tier.has_prefix(h):
+                self.tier.cache_prefix_block(h, self.pages.block_arrays(bid))
+
+    # --- cross-request prefix reuse ------------------------------------
+    def adoptable_prefix_len(self, hashes) -> int:
+        """Longest leading run of prefix-chain hashes this stage can serve
+        without prefill compute: live shared pool blocks OR any tier."""
+        n = 0
+        for h in hashes:
+            if self.pool.has_hash(h) or \
+                    (self.tier is not None and self.tier.has_prefix(h)):
+                n += 1
+            else:
+                break
+        return n
+
+    def pool_prefix_hits(self, hashes) -> int:
+        """Leading run servable by ref-sharing live pool blocks alone (these
+        cost no free blocks — admission control's headroom discount)."""
+        n = 0
+        for h in hashes:
+            if not self.pool.has_hash(h):
+                break
+            n += 1
+        return n
+
+    def adopt_prefix(self, seq: int, hashes, length: int) -> int:
+        """Build `seq`'s prompt prefix from cached blocks: co-resident pool
+        blocks are ref-shared; the rest are promoted out of the tier
+        hierarchy.  Returns the number of tier-promoted blocks."""
+        self._check()
+        missing = [h for h in hashes if not self.pool.has_hash(h)]
+        if len(missing) > self.pool.num_free():
+            raise PoolExhausted(
+                f"worker {self.wid}: adopting prefix for seq {seq} needs "
+                f"{len(missing)} blocks, {self.pool.num_free()} free")
+        fetched = (self.tier.fetch_prefix_chain(missing)
+                   if missing and self.tier is not None else {})
+        _, fills = self.pool.adopt_prefix(seq, hashes, length)
+        for h, bid in fills:
+            self.pages.install_block(bid, fetched[h])
+        # adopted blocks count as dirty: the first offload must persist them
+        # for this sequence (tier copies are keyed by hash, not by seq)
+        self.paged_dirty[seq] = {j for j in range(len(hashes))}
+        return len(fills)

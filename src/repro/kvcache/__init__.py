@@ -6,7 +6,10 @@ from repro.kvcache.cache import (
 )
 from repro.kvcache.paged import (Block, BlockPool, PagedKVCache, PoolExhausted,
                                  blocks_for)
+from repro.kvcache.tiers import (KVTierManager, TierConfig, TIER_HBM,
+                                 TIER_HOST, TIER_SSD)
 
 __all__ = ["decode_state_shapes", "init_decode_state", "decode_state_specs",
            "state_bytes", "Block", "BlockPool", "PagedKVCache", "PoolExhausted",
-           "blocks_for"]
+           "blocks_for", "KVTierManager", "TierConfig", "TIER_HBM",
+           "TIER_HOST", "TIER_SSD"]

@@ -17,6 +17,13 @@ Blocks are also DéjàVu's streaming unit: swapping, ring replication, and
 recovery (see `repro.core.worker` / `repro.core.cluster`) move individual
 live blocks through DéjàVuLib instead of whole padded caches, so the bytes
 on the wire track actual occupancy.
+
+The pool is only tier 0 of the KV-cache hierarchy: `repro.kvcache.tiers`
+(`KVTierManager`) extends it with host-RAM and SSD tiers — cold blocks are
+demoted down-tier as write-behind, preempted sequences swap to host instead
+of being dropped, and the prefix hashes published here persist across
+requests, so `adopt_prefix` can rebuild a new sequence's prompt prefix from
+blocks streamed back out of ANY tier instead of re-prefilling them.
 """
 from __future__ import annotations
 
@@ -118,18 +125,24 @@ class BlockPool:
         return hashes
 
     def allocate(self, seq: int, num_tokens: int,
-                 token_ids: Optional[Sequence[int]] = None) -> Tuple[List[int], List[int]]:
+                 token_ids: Optional[Sequence[int]] = None,
+                 hashes: Optional[Sequence[int]] = None) -> Tuple[List[int], List[int]]:
         """Allocate a table for `seq` holding `num_tokens` live tokens.
 
-        With `token_ids` (the prompt), full blocks whose prefix hash matches a
-        live block are SHARED (ref++) instead of newly allocated.  Returns
-        ``(table, fresh)`` where `fresh` lists the logical block indices the
-        caller must actually write (shared ones already hold the data).
+        With `token_ids` (the prompt) — or a precomputed prefix-hash chain
+        `hashes` (recovery/restore, where the prompt is no longer at hand) —
+        full blocks whose prefix hash matches a live block are SHARED (ref++)
+        instead of newly allocated.  Returns ``(table, fresh)`` where `fresh`
+        lists the logical block indices the caller must actually write
+        (shared ones already hold the data).
         """
         assert seq not in self.tables, f"seq {seq} already allocated"
         n = blocks_for(num_tokens, self.block_size)
-        hashes = (self.chain_hashes(token_ids, self.block_size)
-                  if token_ids is not None else [])
+        if hashes is None:
+            hashes = (self.chain_hashes(token_ids, self.block_size)
+                      if token_ids is not None else [])
+        else:
+            hashes = list(hashes)
         # pre-flight so a mid-allocation PoolExhausted can't leak blocks
         need = sum(1 for j in range(n)
                    if not (j < len(hashes) and hashes[j] in self._hash_index))
@@ -155,6 +168,44 @@ class BlockPool:
         self.seq_lens[seq] = num_tokens
         self._track_peak()
         return table, fresh
+
+    def has_hash(self, h: int) -> bool:
+        """Is a live block holding this prefix-chain hash resident (tier 0)?"""
+        return h in self._hash_index
+
+    def adopt_prefix(self, seq: int, hashes: Sequence[int],
+                     num_tokens: int) -> Tuple[List[int], List[Tuple[int, int]]]:
+        """Build `seq`'s table from an already-materialised prefix chain
+        (cross-request reuse: the bytes come from a co-resident shared block
+        or are promoted out of a lower tier by `KVTierManager`).
+
+        Each hash either refs the live block holding it or takes a fresh
+        block and publishes the hash.  Returns ``(table, fills)`` where
+        `fills` lists ``(hash, bid)`` pairs whose pages the caller must
+        install.  Raises PoolExhausted BEFORE any mutation."""
+        assert seq not in self.tables, f"seq {seq} already allocated"
+        assert num_tokens <= len(hashes) * self.block_size
+        need = sum(1 for h in hashes if h not in self._hash_index)
+        if need > self.num_free():
+            raise PoolExhausted(
+                f"need {need} blocks to adopt prefix for seq {seq}, "
+                f"{self.num_free()} free")
+        table: List[int] = []
+        fills: List[Tuple[int, int]] = []
+        for h in hashes:
+            bid = self._hash_index.get(h)
+            if bid is None:
+                bid = self._take_block()
+                self.blocks[bid].hash = h
+                self._hash_index[h] = bid
+                fills.append((h, bid))
+            else:
+                self.blocks[bid].ref += 1
+            table.append(bid)
+        self.tables[seq] = table
+        self.seq_lens[seq] = num_tokens
+        self._track_peak()
+        return table, fills
 
     def append(self, seq: int, n: int = 1) -> List[Tuple[int, int]]:
         """Grow `seq` by `n` token slots.  Returns copy-on-write directives

@@ -1,0 +1,479 @@
+"""Tiered KV-cache hierarchy: HBM block pool → host RAM → SSD.
+
+`KVTierManager` unifies the paged `BlockPool`/`PagedKVCache` (tier 0, device
+HBM) with a `HostMemoryStore` (tier 1, pinned host RAM) and an `SSDStore`
+(tier 2, local NVMe) behind one block-granular API, the DéjàVu idea of
+hiding cache movement across a memory hierarchy behind compute:
+
+  demotion   cold blocks move DOWN-tier as asynchronous *write-behind* on the
+             shared `StreamEngine`, so the modeled transfer time overlaps the
+             next steps' compute instead of stalling the pipeline;
+  promotion  a needed block moves UP-tier on demand; the rest of its
+             sequence's block chain is *prefetched* behind the first fetch,
+             so only the head of the chain is an exposed stall;
+  prefix     full prompt blocks are indexed by their prefix-chain hash
+             (`BlockPool.chain_hashes`) when their sequence retires, so a NEW
+             request whose prompt shares the prefix streams those blocks back
+             in from whatever tier holds them instead of re-prefilling.
+
+Two kinds of entry live in the hierarchy:
+
+  ``pfx/<hash>``            immutable full prompt blocks, keyed by content —
+                            re-creatable by prefill, so they may be dropped
+                            under tier-2 pressure (LRU);
+  ``tswap/seq<i>/blk<j>``   a preempted/swapped sequence's live blocks —
+                            possibly the only copy, so they spill to SSD but
+                            are never dropped (over-commit is recorded).
+
+A block's bytes are packed as one ``[2, Lstage, w, Hkv, Dh]`` array (K
+stacked on V) so every store holds exactly one object per block and a spill
+can never tear a block across tiers.  All *bookkeeping* (index, LRU order,
+eviction planning) happens synchronously on the caller's thread; only the
+*data movement* closures run on the streamer, and every read path drains the
+streamer first, so reads always observe completed writes.
+
+Tier 2 survives worker death (it is disk): `reattach()` rebuilds the index
+from the self-describing SSD keys, which is how failure recovery restores
+state from the lowest tier holding a replica (see
+`DejaVuCluster._recover_worker_paged`).
+"""
+from __future__ import annotations
+
+import tempfile
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore
+from repro.core.dejavulib.streamer import StreamEngine
+from repro.core.dejavulib.transport import (DEFAULT_HW, HardwareModel,
+                                            HostLinkTransport, SSDTransport)
+from repro.kvcache.paged import BlockPool, PagedKVCache
+
+TIER_HBM, TIER_HOST, TIER_SSD = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class TierConfig:
+    """Per-stage capacities of the off-device tiers, in KV blocks."""
+    host_capacity_blocks: Optional[int] = None   # None = unbounded
+    ssd_capacity_blocks: Optional[int] = None    # None = unbounded
+    ssd_root: Optional[str] = None               # None = private tempdir
+
+
+@dataclass
+class _Entry:
+    key: str            # store key (same string in every tier)
+    kind: str           # "pfx" | "swap"
+    tier: int           # fastest off-device tier currently holding the bytes
+    on_ssd: bool        # a (possibly additional) copy exists on disk
+    nbytes: int
+    seq: int = -1       # swap entries only
+    j: int = -1         # swap entries only
+
+
+class KVTierManager:
+    """Block-granular movement between one stage's HBM pool and its
+    host/SSD tiers.  One instance per `StageWorker` (each stage caches its
+    own layer slice of every block, keyed by the same prefix hash)."""
+
+    def __init__(self, pool: BlockPool, pages: PagedKVCache,
+                 streamer: StreamEngine, hw: HardwareModel = DEFAULT_HW,
+                 cfg: TierConfig = TierConfig(), name: str = "tier"):
+        self.pool = pool
+        self.pages = pages
+        self.streamer = streamer
+        self.cfg = cfg
+        self.name = name
+        cap = (None if cfg.host_capacity_blocks is None
+               else cfg.host_capacity_blocks * pages.block_bytes)
+        # capacity backstop: the manager plans placement in whole blocks, so
+        # a raise here means the planner's accounting is wrong — fail loud
+        self.host = HostMemoryStore(f"{name}-tier1", capacity_bytes=cap)
+        root = cfg.ssd_root or tempfile.mkdtemp(prefix=f"dejavu-{name}-ssd-")
+        self.ssd = SSDStore(root, name=f"{name}-tier2")
+        self.hostlink = HostLinkTransport(hw)
+        self.ssdlink = SSDTransport(hw)
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()  # LRU order
+        self._stats: Dict[str, float] = {}
+        self._pending: List[object] = []   # in-flight streamer tasks
+        self._pinned: set = set()          # keys a read-in-progress protects
+
+    # ------------------------------------------------------------------
+    # bookkeeping helpers (caller thread only)
+    # ------------------------------------------------------------------
+    def _bump(self, key: str, v: float = 1) -> None:
+        self._stats[key] = self._stats.get(key, 0) + v
+
+    def _submit(self, fn, model_seconds: float = 0.0, tag: str = "") -> None:
+        self._pending.append(self.streamer.submit(
+            fn, model_seconds=model_seconds, tag=tag))
+        if len(self._pending) > 64:     # bound the list (and the ndarrays
+            self._reap()                # its closures pin) between reads
+
+    def _reap(self) -> None:
+        """Drop completed tasks, surfacing the first error any of them hit —
+        a failed demotion must not silently strand an entry whose bytes
+        never landed."""
+        live, err = [], None
+        for task in self._pending:
+            if not task.done.is_set():
+                live.append(task)
+            elif task.error is not None and err is None:
+                err = task
+        self._pending = live
+        if err is not None:
+            raise RuntimeError(
+                f"tier write-behind {err.tag!r} failed") from err.error
+
+    def _sync(self) -> None:
+        """Barrier before any read: wait for in-flight write-behinds and
+        surface their errors."""
+        self.streamer.drain()
+        self._reap()
+
+    def _touch(self, key: str) -> None:
+        self._entries.move_to_end(key)
+
+    def _host_blocks(self) -> int:
+        return sum(1 for e in self._entries.values() if e.tier == TIER_HOST)
+
+    def _ssd_blocks(self) -> int:
+        return sum(1 for e in self._entries.values() if e.on_ssd)
+
+    @staticmethod
+    def _pack(arrays: Dict[str, np.ndarray]) -> np.ndarray:
+        return np.stack([np.asarray(arrays["k"]), np.asarray(arrays["v"])])
+
+    @staticmethod
+    def _unpack(arr: np.ndarray) -> Dict[str, np.ndarray]:
+        return {"k": arr[0], "v": arr[1]}
+
+    # ------------------------------------------------------------------
+    # placement planning + async data movement
+    # ------------------------------------------------------------------
+    def _make_host_room(self, entry: _Entry) -> bool:
+        """Spill LRU host entries to SSD until `entry` fits in tier 1.
+        False when no room can be made (capacity 0, or every resident entry
+        is pinned by a read in progress)."""
+        cap = self.cfg.host_capacity_blocks
+        if cap is not None and cap <= 0:
+            return False
+        need = 0 if entry.tier == TIER_HOST else 1
+        while cap is not None and self._host_blocks() + need > cap:
+            victim = next((e for e in self._entries.values()
+                           if e.tier == TIER_HOST and e is not entry
+                           and e.key not in self._pinned), None)
+            if victim is None:
+                return False
+            self._spill_to_ssd(victim)
+        return True
+
+    def _admit_host(self, entry: _Entry, packed: np.ndarray) -> None:
+        """Place `entry`'s bytes in tier 1 — or straight in tier 2 when no
+        host room can be made; the actual copy is write-behind."""
+        if not self._make_host_room(entry):
+            self._admit_ssd(entry, packed)
+            return
+        entry.tier = TIER_HOST
+        key, link = entry.key, self.hostlink
+
+        def _put():
+            self.host.put(key, link.transfer(packed, tag=key))
+
+        self._bump("write_behind_model_s", link.model_time(packed.nbytes))
+        self._submit(_put, model_seconds=link.model_time(packed.nbytes),
+                     tag=f"tier-demote-{key}")
+
+    def _admit_ssd(self, entry: _Entry, packed: np.ndarray) -> None:
+        self._make_ssd_room(exclude=entry)
+        entry.tier, entry.on_ssd = TIER_SSD, True
+        key, link = entry.key, self.ssdlink
+
+        def _put():
+            self.ssd.put(key, link.transfer(packed, tag=key))
+
+        self._bump("write_behind_model_s", link.model_time(packed.nbytes))
+        self._submit(_put, model_seconds=link.model_time(packed.nbytes),
+                     tag=f"tier-demote2-{key}")
+
+    def _spill_to_ssd(self, entry: _Entry) -> None:
+        """Demote one host-resident entry to tier 2 (write-behind)."""
+        key = entry.key
+        self._bump("spills")
+        if entry.on_ssd:                    # disk already holds a copy
+            entry.tier = TIER_SSD
+            self._submit(lambda: self.host.delete(key),
+                         tag=f"tier-drop1-{key}")
+            return
+        self._make_ssd_room(exclude=entry)
+        entry.tier, entry.on_ssd = TIER_SSD, True
+        link = self.ssdlink
+
+        def _spill():
+            arr = self.host.pop(key)        # FIFO: the host put already ran
+            self.ssd.put(key, link.transfer(arr, tag=key))
+
+        self._bump("write_behind_model_s", link.model_time(entry.nbytes))
+        self._submit(_spill, model_seconds=link.model_time(entry.nbytes),
+                     tag=f"tier-spill-{key}")
+
+    def _make_ssd_room(self, exclude: Optional[_Entry] = None) -> None:
+        cap = self.cfg.ssd_capacity_blocks
+        while cap is not None and self._ssd_blocks() >= cap:
+            # Only content-addressed prefix blocks are droppable (they can be
+            # re-prefilled); swap blocks may be the only copy of live state.
+            # Evict the NEWEST prefix block (reverse LRU order): chains are
+            # demoted head-first, so MRU eviction sacrifices chain TAILS —
+            # dropping a head (the LRU end) would strand its whole chain,
+            # since adoption needs a leading run.
+            victim = next((e for e in reversed(self._entries.values())
+                           if e.on_ssd and e.kind == "pfx" and e is not exclude
+                           and e.key not in self._pinned), None)
+            if victim is None:
+                self._bump("ssd_overcommit")
+                return
+            if victim.tier == TIER_HOST:
+                # host still serves it: retiring just the disk copy frees
+                # the SSD slot without evicting a hot block from everything
+                victim.on_ssd = False
+                self._submit(lambda k=victim.key: self.ssd.delete(k),
+                             tag=f"tier-unpersist-{victim.key}")
+                self._bump("ssd_copy_retired")
+            else:
+                self._drop(victim)
+
+    def _drop(self, entry: _Entry, evicted: bool = True) -> None:
+        self._entries.pop(entry.key, None)
+        key, on_host, on_ssd = entry.key, entry.tier == TIER_HOST, entry.on_ssd
+        if evicted:
+            self._bump("dropped")
+
+        def _rm():
+            if on_host:
+                self.host.delete(key)
+            if on_ssd:
+                self.ssd.delete(key)
+
+        self._submit(_rm, tag=f"tier-evict-{key}")
+
+    def _read(self, entry: _Entry) -> np.ndarray:
+        """Synchronous up-tier read of one entry (caller synced first).
+        Returns the transferred copy and refreshes LRU/tier state."""
+        key = entry.key
+        if entry.tier == TIER_HOST:
+            arr = self.hostlink.transfer(self.host.get(key), tag=key)
+            self._bump("host_hits")
+        else:
+            # a promotion earlier in this chain may have scheduled a spill
+            # whose SSD write has not landed yet — wait for the queue
+            self._sync()
+            arr = self.ssdlink.transfer(self.ssd.get(key), tag=key)
+            arr = self.hostlink.transfer(arr, tag=key)    # SSD → host → HBM
+            self._bump("ssd_hits")
+            entry.nbytes = arr.nbytes
+            self._promote_to_host(entry, arr)
+        self._touch(key)
+        return arr
+
+    def _model_fetch_time(self, entry: _Entry) -> float:
+        t = self.hostlink.model_time(entry.nbytes)
+        if entry.tier == TIER_SSD:
+            t += self.ssdlink.model_time(entry.nbytes)
+        return t
+
+    def _promote_to_host(self, entry: _Entry, arr: np.ndarray) -> None:
+        """A tier-2 hit earns the block a tier-1 slot (keeps the SSD copy —
+        it is free persistence for the next failure).  Stays SSD-only when
+        no host room can be made."""
+        if not self._make_host_room(entry):
+            return
+        entry.tier = TIER_HOST
+        key = entry.key
+        self._submit(lambda: self.host.put(key, arr),
+                     tag=f"tier-promote-{key}")
+
+    # ------------------------------------------------------------------
+    # prefix cache (cross-request reuse)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def prefix_key(h: int) -> str:
+        return f"pfx/{h}"
+
+    def has_prefix(self, h: int) -> bool:
+        return self.prefix_key(h) in self._entries
+
+    def prefix_chain_len(self, hashes: Sequence[int]) -> int:
+        """Longest leading run of `hashes` held by the hierarchy."""
+        n = 0
+        for h in hashes:
+            if not self.has_prefix(h):
+                break
+            n += 1
+        return n
+
+    def cache_prefix_block(self, h: int, arrays: Dict[str, np.ndarray]) -> bool:
+        """Write-behind demote of one FULL prompt block keyed by its chain
+        hash (called when its sequence retires).  Dedups by content."""
+        key = self.prefix_key(h)
+        if key in self._entries:
+            self._touch(key)
+            return False
+        packed = self._pack(arrays)
+        entry = _Entry(key, "pfx", -1, False, packed.nbytes)  # tier set by admit
+        self._entries[key] = entry
+        self._bump("demotions")
+        self._admit_host(entry, packed)
+        return True
+
+    def fetch_prefix_chain(self, hashes: Sequence[int]
+                           ) -> Dict[int, Dict[str, np.ndarray]]:
+        """Promote a chain of prefix blocks for installation into the pool.
+
+        The first block's transfer is an exposed stall; the rest of the chain
+        is prefetched behind it (and behind the suffix compute), so only the
+        head latency lands on the critical path (modeled accounting)."""
+        if not hashes:
+            return {}
+        self._sync()
+        keys = [self.prefix_key(h) for h in hashes]
+        self._pinned.update(keys)        # mid-chain evictions must skip us
+        try:
+            out: Dict[int, Dict[str, np.ndarray]] = {}
+            for i, h in enumerate(hashes):
+                entry = self._entries[self.prefix_key(h)]
+                t = self._model_fetch_time(entry)
+                self._bump("stall_model_s" if i == 0 else "prefetch_model_s", t)
+                out[h] = self._unpack(self._read(entry))
+                self._bump("prefix_promotions")
+            return out
+        finally:
+            self._pinned.difference_update(keys)
+
+    # ------------------------------------------------------------------
+    # swap path (preemption / restore through the hierarchy)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def swap_key(seq: int, j: int) -> str:
+        return f"tswap/seq{seq}/blk{j}"
+
+    def _swap_entries(self, seq: int) -> List[_Entry]:
+        return sorted((e for e in self._entries.values()
+                       if e.kind == "swap" and e.seq == seq),
+                      key=lambda e: e.j)
+
+    def swap_out_blocks(self, seq: int,
+                        blocks: Dict[int, Dict[str, np.ndarray]]) -> None:
+        """Offload the given (dirty) blocks of `seq` down-tier, write-behind.
+        Re-offloading a block refreshes whatever copies the tiers hold."""
+        for j, arrays in sorted(blocks.items()):
+            key = self.swap_key(seq, j)
+            packed = self._pack(arrays)
+            entry = self._entries.get(key)
+            if entry is None:
+                entry = _Entry(key, "swap", -1, False, packed.nbytes,
+                               seq=seq, j=j)  # tier set by admit
+                self._entries[key] = entry
+            else:
+                self._touch(key)
+                if entry.on_ssd:            # stale disk copy: retire it
+                    self._submit(lambda k2=key: self.ssd.delete(k2),
+                                 tag=f"tier-stale-{key}")
+                    entry.on_ssd = False
+            entry.nbytes = packed.nbytes
+            self._bump("swap_out_blocks")
+            self._admit_host(entry, packed)
+
+    def swap_in_blocks(self, seq: int) -> Dict[int, Dict[str, np.ndarray]]:
+        """Bring every held block of `seq` back for installation: the lowest
+        tier holding each block serves it; blocks past the first are
+        prefetched behind the head fetch.  Entries stay (clean blocks need
+        not be re-written on the next offload)."""
+        self._sync()
+        entries = self._swap_entries(seq)
+        keys = [e.key for e in entries]
+        self._pinned.update(keys)
+        try:
+            out: Dict[int, Dict[str, np.ndarray]] = {}
+            for i, entry in enumerate(entries):
+                t = self._model_fetch_time(entry)
+                self._bump("stall_model_s" if i == 0 else "prefetch_model_s", t)
+                out[entry.j] = self._unpack(self._read(entry))
+                self._bump("swap_in_blocks")
+            return out
+        finally:
+            self._pinned.difference_update(keys)
+
+    def restore_swap_from_ssd(self, seq: int, keep: int
+                              ) -> Optional[Dict[int, Dict[str, np.ndarray]]]:
+        """Failure recovery: serve `seq`'s first `keep` blocks from the
+        persistent tier, or None if disk does not hold the full chain
+        (the caller then falls back to the replication ring)."""
+        self._sync()
+        present = {e.j: e for e in self._swap_entries(seq) if e.on_ssd}
+        if any(j not in present for j in range(keep)):
+            return None
+        keys = [present[j].key for j in range(keep)]
+        self._pinned.update(keys)
+        try:
+            out: Dict[int, Dict[str, np.ndarray]] = {}
+            for i in range(keep):
+                entry = present[i]
+                self._bump("stall_model_s" if i == 0 else "prefetch_model_s",
+                           self._model_fetch_time(entry))
+                out[i] = self._unpack(self._read(entry))
+            self._bump("ssd_restores")
+            return out
+        finally:
+            self._pinned.difference_update(keys)
+
+    def drop_seq(self, seq: int) -> None:
+        """Retire a finished sequence's swap entries from every tier."""
+        for entry in self._swap_entries(seq):
+            self._drop(entry, evicted=False)
+
+    # ------------------------------------------------------------------
+    # failure / recovery
+    # ------------------------------------------------------------------
+    def on_host_failure(self) -> None:
+        """The worker died: tier 1 (its RAM) dies with it; tier 2 is disk and
+        survives.  Entries whose only copy was host-resident are lost."""
+        self.host.clear()
+        for key, entry in list(self._entries.items()):
+            if entry.on_ssd:
+                entry.tier = TIER_SSD
+            else:
+                del self._entries[key]
+                self._bump("lost_with_host")
+
+    def reattach(self) -> int:
+        """Rebuild the index from the self-describing SSD keys (fresh worker
+        pointed at a dead predecessor's disk).  Returns entries recovered."""
+        n = 0
+        for key in self.ssd.keys():
+            if key in self._entries:
+                continue
+            nbytes = self.ssd.size(key)    # model restores at their true cost
+            if key.startswith("pfx/"):
+                self._entries[key] = _Entry(key, "pfx", TIER_SSD, True, nbytes)
+            elif key.startswith("tswap/seq"):
+                body = key[len("tswap/seq"):]          # "<seq>/blk<j>"
+                seq_s, blk_s = body.split("/blk")
+                self._entries[key] = _Entry(key, "swap", TIER_SSD, True, nbytes,
+                                            seq=int(seq_s), j=int(blk_s))
+            else:
+                continue
+            n += 1
+        self._bump("reattached", n)
+        return n
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        out = dict(self._stats)
+        out["host_blocks"] = self._host_blocks()
+        out["ssd_blocks"] = self._ssd_blocks()
+        out["prefix_entries"] = sum(1 for e in self._entries.values()
+                                    if e.kind == "pfx")
+        return out

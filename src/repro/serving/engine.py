@@ -14,6 +14,13 @@ immediately, and a full pool preempts the youngest sequence (block-granular
 swap-out) instead of stalling.  With greedy sampling its outputs are
 bit-identical to `run`'s, which tests assert.
 
+`tiered=True` additionally backs every stage's pool with the HBM→host→SSD
+hierarchy of `repro.kvcache.tiers`: preemption swaps through the tiers
+(write-behind, spilling to SSD under host pressure), retired prompt blocks
+enter a persistent prefix cache, and a new request whose prompt prefix
+matches streams those blocks back in instead of re-prefilling them
+(`EngineReport.prefill_tokens_saved` / `tier_stats`).
+
 Failure injection / detection / 4-step recovery run between steps in both
 loops; recovered work rolls back to its last replicated step and regenerates
 bit-identically.
@@ -54,6 +61,10 @@ class EngineReport:
     batch_trace: List[int] = field(default_factory=list)
     transfer_bytes: Dict[str, int] = field(default_factory=dict)
     events: List[dict] = field(default_factory=list)
+    # cross-request prefix reuse through the tier hierarchy (tiered=True)
+    prefill_tokens_total: int = 0
+    prefill_tokens_saved: int = 0           # prompt tokens served from cache
+    tier_stats: Dict[str, float] = field(default_factory=dict)
 
 
 class ServingEngine:
@@ -65,6 +76,9 @@ class ServingEngine:
                  compress_replicas: bool = False,
                  paged: bool = False, kv_block_size: Optional[int] = None,
                  kv_pool_blocks: Optional[int] = None,
+                 tiered: bool = False,
+                 host_cache_blocks: Optional[int] = None,
+                 ssd_cache_blocks: Optional[int] = None,
                  hw: HardwareModel = DEFAULT_HW,
                  sampler: Callable = greedy):
         self.cfg = cfg
@@ -75,7 +89,10 @@ class ServingEngine:
                                      replication=replication,
                                      compress_replicas=compress_replicas, hw=hw,
                                      paged=paged, kv_block_size=kv_block_size,
-                                     kv_pool_blocks=kv_pool_blocks)
+                                     kv_pool_blocks=kv_pool_blocks,
+                                     tiered=tiered,
+                                     host_cache_blocks=host_cache_blocks,
+                                     ssd_cache_blocks=ssd_cache_blocks)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -166,7 +183,9 @@ class ServingEngine:
                 cl.resume_seq(r.rid)
                 active.append(r)
             while queue and len(active) < max_active and \
-                    cl.can_admit(queue[0].prompt_len, len(active)):
+                    cl.can_admit(queue[0].prompt_len, len(active),
+                                 token_ids=(queue[0].prompt if cl.tiered
+                                            else None)):
                 r = queue.pop(0)
                 self._advance_seq(r, next_step, active, preempted, report,
                                   fail_at)
@@ -208,6 +227,10 @@ class ServingEngine:
                     cl.free_seq(r.rid)
                     active.remove(r)
         report.peak_kv_bytes = cl.kv_bytes_peak
+        report.prefill_tokens_total = cl.prefill_tokens_total
+        report.prefill_tokens_saved = cl.prefill_tokens_saved
+        if cl.tiered:
+            report.tier_stats = cl.tier_stats()
         return report
 
     def _advance_seq(self, r: Request, next_step: Dict[int, int],
@@ -316,6 +339,8 @@ class ServingEngine:
         transports = [self.cluster.net]
         for w in groups:
             transports += [w.cache.net, w.cache.hostlink, w.cache.local]
+            if getattr(w, "tier", None) is not None:
+                transports += [w.tier.hostlink, w.tier.ssdlink]
         for t in transports:
             out[t.kind] = out.get(t.kind, 0) + t.bytes_total()
         return out

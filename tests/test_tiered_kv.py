@@ -1,0 +1,416 @@
+"""Tiered KV-cache hierarchy (HBM→host→SSD): exact round-trips through every
+tier pair, capacity enforcement + LRU spill, SSD atomicity, cross-request
+prefix reuse, preempt-to-host→resume token identity, recovery with tiers,
+and the planner's tier terms."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.dejavulib import HostMemoryStore, SSDStore, StreamEngine
+from repro.core.planner import MachineSpec, TierSpec, min_token_depth, plan
+from repro.kvcache.paged import BlockPool, PagedKVCache
+from repro.kvcache.tiers import KVTierManager, TierConfig, TIER_HOST, TIER_SSD
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # optional dev dep (requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# unit level: the tier manager round-trips bytes exactly
+# ---------------------------------------------------------------------------
+
+def _mgr(tmp_path, host_cap=None, ssd_cap=None, block_size=4, name="t"):
+    pool = BlockPool(8, block_size)
+    pages = PagedKVCache(pool, layers=2, num_kv_heads=2, head_dim=4,
+                         dtype="float32")
+    streamer = StreamEngine(f"test-{name}")
+    cfg = TierConfig(host_capacity_blocks=host_cap, ssd_capacity_blocks=ssd_cap,
+                     ssd_root=str(tmp_path / name))
+    return KVTierManager(pool, pages, streamer, cfg=cfg, name=name)
+
+
+def _block(rng, layers=2, w=4, h=2, d=4):
+    return {"k": rng.standard_normal((layers, w, h, d)).astype(np.float32),
+            "v": rng.standard_normal((layers, w, h, d)).astype(np.float32)}
+
+
+def _assert_block_equal(a, b):
+    for leaf in ("k", "v"):
+        np.testing.assert_array_equal(a[leaf], b[leaf])
+
+
+def test_prefix_roundtrip_hbm_host(tmp_path):
+    """evict→promote through tier 1 is byte-exact."""
+    mgr = _mgr(tmp_path)
+    rng = np.random.default_rng(0)
+    blocks = {h: _block(rng) for h in range(5)}
+    for h, arrs in blocks.items():
+        assert mgr.cache_prefix_block(h, arrs)
+    got = mgr.fetch_prefix_chain(list(blocks))
+    for h, arrs in blocks.items():
+        _assert_block_equal(got[h], arrs)
+    assert mgr.stats()["host_hits"] == 5
+
+
+def test_prefix_roundtrip_through_ssd(tmp_path):
+    """host pressure spills LRU blocks to SSD; promotion brings them back
+    byte-exact and re-earns them a host slot."""
+    mgr = _mgr(tmp_path, host_cap=2)
+    rng = np.random.default_rng(1)
+    blocks = {h: _block(rng) for h in range(6)}
+    for h, arrs in blocks.items():
+        mgr.cache_prefix_block(h, arrs)
+    st_ = mgr.stats()
+    assert st_["host_blocks"] <= 2 and st_["spills"] >= 4
+    got = mgr.fetch_prefix_chain(list(blocks))
+    for h, arrs in blocks.items():
+        _assert_block_equal(got[h], arrs)
+    assert mgr.stats()["ssd_hits"] >= 4
+    # promotion-on-hit moved the last-read blocks up: a second fetch of the
+    # chain tail is served by the host tier
+    tail = list(blocks)[-2:]
+    before = mgr.stats().get("host_hits", 0)
+    mgr.fetch_prefix_chain(tail)
+    assert mgr.stats().get("host_hits", 0) > before
+
+
+def test_prefix_direct_to_ssd_when_host_disabled(tmp_path):
+    mgr = _mgr(tmp_path, host_cap=0)
+    rng = np.random.default_rng(2)
+    arrs = _block(rng)
+    mgr.cache_prefix_block(7, arrs)
+    got = mgr.fetch_prefix_chain([7])
+    _assert_block_equal(got[7], arrs)
+    assert mgr.stats()["ssd_hits"] == 1
+
+
+def test_swap_roundtrip_every_tier_pair(tmp_path):
+    """A preempted sequence's blocks round-trip exactly whether they landed
+    in host RAM, spilled to SSD, or were re-offloaded dirty."""
+    mgr = _mgr(tmp_path, host_cap=1)
+    rng = np.random.default_rng(3)
+    blocks = {j: _block(rng) for j in range(4)}   # host cap 1 → 3 spill
+    mgr.swap_out_blocks(5, blocks)
+    got = mgr.swap_in_blocks(5)
+    assert set(got) == set(blocks)
+    for j in blocks:
+        _assert_block_equal(got[j], blocks[j])
+    # dirty re-offload of one block replaces every stale copy
+    blocks2 = {2: _block(rng)}
+    mgr.swap_out_blocks(5, blocks2)
+    got2 = mgr.swap_in_blocks(5)
+    _assert_block_equal(got2[2], blocks2[2])
+    _assert_block_equal(got2[1], blocks[1])
+    mgr.drop_seq(5)
+    assert mgr.swap_in_blocks(5) == {}
+
+
+def test_reattach_rebuilds_index_from_ssd(tmp_path):
+    """Worker death: host tier dies, SSD survives; a fresh manager on the
+    same root recovers prefix blocks AND fully-spilled swap chains."""
+    mgr = _mgr(tmp_path, host_cap=0, name="re")
+    rng = np.random.default_rng(4)
+    pfx = _block(rng)
+    swp = {0: _block(rng), 1: _block(rng)}
+    mgr.cache_prefix_block(11, pfx)
+    mgr.swap_out_blocks(3, swp)
+    mgr.streamer.drain()
+    mgr.on_host_failure()
+
+    fresh = _mgr(tmp_path, host_cap=0, name="re")   # same ssd_root
+    assert fresh.reattach() == 3
+    assert fresh.has_prefix(11)
+    _assert_block_equal(fresh.fetch_prefix_chain([11])[11], pfx)
+    got = fresh.restore_swap_from_ssd(3, keep=2)
+    assert got is not None
+    for j in swp:
+        _assert_block_equal(got[j], swp[j])
+    assert fresh.restore_swap_from_ssd(3, keep=3) is None   # chain incomplete
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 3), st.integers(1, 6), st.integers(0, 2**31 - 1))
+    def test_property_roundtrip_any_capacity(host_cap, n_blocks, seed):
+        """Any host capacity × chain length: every block survives the
+        hierarchy byte-exact (the spill path may differ per draw)."""
+        import tempfile
+        rng = np.random.default_rng(seed)
+        with tempfile.TemporaryDirectory() as td:
+            pool = BlockPool(8, 4)
+            pages = PagedKVCache(pool, layers=1, num_kv_heads=1, head_dim=2,
+                                 dtype="float32")
+            mgr = KVTierManager(pool, pages, StreamEngine("hyp"),
+                                cfg=TierConfig(host_capacity_blocks=host_cap,
+                                               ssd_root=td))
+            blocks = {h: _block(rng, layers=1, w=4, h=1, d=2)
+                      for h in range(n_blocks)}
+            for h, arrs in blocks.items():
+                mgr.cache_prefix_block(h, arrs)
+            got = mgr.fetch_prefix_chain(list(blocks))
+            for h, arrs in blocks.items():
+                for leaf in ("k", "v"):
+                    np.testing.assert_array_equal(got[h][leaf], arrs[leaf])
+            mgr.streamer.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes: store capacity enforcement + SSD atomicity
+# ---------------------------------------------------------------------------
+
+def test_host_store_capacity_raises():
+    store = HostMemoryStore("cap", capacity_bytes=100)
+    store.put("a", np.zeros(20, np.int8))
+    with pytest.raises(MemoryError):
+        store.put("b", np.zeros(101, np.int8))
+    assert "b" not in store and store.used_bytes() == 20
+
+
+def test_host_store_evict_lru_spills_oldest():
+    spilled = []
+    store = HostMemoryStore("lru", capacity_bytes=100, on_full="evict_lru",
+                            spill_cb=lambda k, a: spilled.append(k))
+    store.put("a", np.zeros(40, np.int8))
+    store.put("b", np.zeros(40, np.int8))
+    _ = store.get("a")                       # touch: b becomes LRU
+    store.put("c", np.zeros(40, np.int8))    # must evict b, not a
+    assert spilled == ["b"]
+    assert "a" in store and "c" in store and "b" not in store
+    with pytest.raises(MemoryError):         # single over-capacity array
+        store.put("huge", np.zeros(101, np.int8))
+
+
+def test_ssd_store_atomic_put(tmp_path, monkeypatch):
+    """A crash mid-flush can never publish a torn block: the interrupted put
+    leaves no .npy and no temp litter, and an existing value is kept."""
+    store = SSDStore(str(tmp_path))
+    good = np.arange(16, dtype=np.float32)
+    store.put("blk", good)
+
+    real_save = np.save
+    def exploding_save(f, arr):
+        f.write(b"partial garbage")
+        raise IOError("simulated crash mid-write")
+    monkeypatch.setattr(np, "save", exploding_save)
+    with pytest.raises(IOError):
+        store.put("blk", np.zeros(16, np.float32))
+    monkeypatch.setattr(np, "save", real_save)
+
+    np.testing.assert_array_equal(store.get("blk"), good)  # old value intact
+    assert not [f for f in os.listdir(store.root) if ".tmp." in f]
+    # an orphaned tmp file from a crashed OTHER writer is invisible to keys()
+    open(os.path.join(store.root, "zzz.npy.tmp.123.456"), "wb").close()
+    assert store.keys() == ["blk"]
+
+
+# ---------------------------------------------------------------------------
+# e2e: serving engine over the tier hierarchy
+# ---------------------------------------------------------------------------
+
+CFG = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
+                          dtype="float32", num_layers=2)
+N_SHARED, N_TAIL = 24, 8
+
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(0, CFG.vocab_size, (N_SHARED,)).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, CFG.vocab_size,
+                                            (N_TAIL,)).astype(np.int32)])
+               for _ in range(4)]
+
+    def mkreqs(max_new=5):
+        return [Request(rid=i, prompt=p.copy(), max_new=max_new)
+                for i, p in enumerate(prompts)]
+
+    def engine(**kw):
+        return ServingEngine(CFG, model, params, 2, paged=True, **kw)
+
+    baseline = engine(kv_pool_blocks=128).run_continuous(mkreqs(), max_active=1)
+    return engine, mkreqs, baseline
+
+
+def test_cross_request_prefix_reuse_from_tiers(served):
+    """max_active=1 retires each request before the next admits, so every
+    prefix hit is served from host/SSD — and saves ≥30% of prefill tokens
+    with bit-identical greedy outputs."""
+    engine, mkreqs, baseline = served
+    eng = engine(tiered=True, kv_pool_blocks=128, host_cache_blocks=16,
+                 ssd_cache_blocks=64)
+    rep = eng.run_continuous(mkreqs(), max_active=1)
+    assert rep.tokens == baseline.tokens
+    assert rep.prefill_tokens_saved / rep.prefill_tokens_total >= 0.30
+    assert rep.tier_stats["host_hits"] + rep.tier_stats.get("ssd_hits", 0) > 0
+    assert rep.tier_stats["demotions"] > 0
+
+
+@pytest.mark.slow
+def test_prefix_reuse_via_ssd_spill(served):
+    """With a 1-block host tier the same reuse must promote through SSD."""
+    engine, mkreqs, baseline = served
+    eng = engine(tiered=True, kv_pool_blocks=128, host_cache_blocks=1,
+                 ssd_cache_blocks=64)
+    rep = eng.run_continuous(mkreqs(), max_active=1)
+    assert rep.tokens == baseline.tokens
+    assert rep.tier_stats.get("ssd_hits", 0) > 0
+    assert rep.tier_stats.get("spills", 0) > 0
+
+
+@pytest.mark.slow
+def test_tight_tier_caps_never_crash_and_keep_reuse(served):
+    """Regression: with BOTH tiers capacity-starved, mid-chain promotion
+    used to evict-and-drop the very entry being fetched (KeyError), and
+    head-first SSD eviction stranded whole chains (0% reuse).  Pinning +
+    MRU prefix eviction keep the loop alive and the chain head useful."""
+    engine, mkreqs, baseline = served
+    eng = engine(tiered=True, kv_pool_blocks=128, host_cache_blocks=2,
+                 ssd_cache_blocks=2)
+    rep = eng.run_continuous(mkreqs(), max_active=1)
+    assert rep.tokens == baseline.tokens
+    assert rep.prefill_tokens_saved > 0
+
+
+def test_boundary_prompt_admission_not_overcounted(served):
+    """Regression: a prompt whose length is a block multiple had its LAST
+    full block discounted by admission but NOT shared by adoption (the chain
+    is capped one block short), over-admitting into forced preemptions."""
+    import jax
+    from repro.models import build_model
+    from repro.serving import Request, ServingEngine
+
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, CFG.vocab_size, (16,)).astype(np.int32)  # 2 blocks
+
+    def reqs():
+        return [Request(rid=i, prompt=prompt.copy(), max_new=4)
+                for i in range(2)]
+
+    flat = ServingEngine(CFG, model, params, 2, paged=True, kv_pool_blocks=64)
+    rb = flat.run_continuous(reqs(), max_active=2)
+    eng = ServingEngine(CFG, model, params, 2, paged=True, tiered=True,
+                        kv_pool_blocks=4)
+    rep = eng.run_continuous(reqs(), max_active=2)
+    assert rep.tokens == rb.tokens
+    assert rep.preemptions == 0     # admission must not overcommit the pool
+
+
+def test_write_behind_errors_surface_on_next_read(tmp_path):
+    """Regression: a failed demotion (e.g. disk full) used to be swallowed
+    by the streamer; the next read must raise it instead of serving a
+    stranded entry."""
+    mgr = _mgr(tmp_path, host_cap=0, name="err")
+    rng = np.random.default_rng(9)
+    mgr.cache_prefix_block(1, _block(rng))
+
+    def exploding_put(key, arr):
+        raise IOError("disk full")
+    mgr.ssd.put = exploding_put
+    with pytest.raises(RuntimeError, match="write-behind"):
+        mgr.fetch_prefix_chain([1])
+
+
+@pytest.mark.slow
+def test_preempt_to_host_resume_token_identical(served):
+    """e2e satellite: a preempt-to-tier → resume trace is token-identical to
+    the never-preempted run, including when the swap spilled to SSD."""
+    engine, mkreqs, _ = served
+    big = engine(kv_pool_blocks=128).run_continuous(mkreqs(max_new=10),
+                                                    max_active=2)
+    tiny = engine(tiered=True, kv_pool_blocks=7, host_cache_blocks=2,
+                  ssd_cache_blocks=64)
+    rep = tiny.run_continuous(mkreqs(max_new=10), max_active=2)
+    assert rep.preemptions >= 1
+    assert rep.tokens == big.tokens
+    assert rep.tier_stats.get("spills", 0) > 0      # swap crossed into SSD
+
+
+@pytest.mark.slow
+def test_failure_recovery_with_tiers(served):
+    """Killing a worker mid-trace: the fresh worker reattaches the dead
+    machine's persistent SSD tier and regenerates identical tokens."""
+    engine, mkreqs, baseline = served
+    eng = engine(tiered=True, replication=True, kv_pool_blocks=128,
+                 host_cache_blocks=8, ssd_cache_blocks=64)
+    rep = eng.run_continuous(mkreqs(), max_active=2, fail_at={9: 1})
+    assert rep.failures == 1 and rep.recoveries == 1
+    assert rep.tokens == baseline.tokens
+
+
+@pytest.mark.slow
+def test_failure_while_preempted_with_tiers(served):
+    """A worker dies while sequences are swapped through the hierarchy: the
+    rolled-back sequences regenerate bit-identically (from the SSD tier
+    where it holds the full chain, else the replica ring)."""
+    engine, mkreqs, _ = served
+    big = engine(kv_pool_blocks=128).run_continuous(mkreqs(max_new=10),
+                                                    max_active=2)
+    eng = engine(tiered=True, replication=True, kv_pool_blocks=7,
+                 host_cache_blocks=0)
+    rep = eng.run_continuous(mkreqs(max_new=10), max_active=2, fail_at={12: 1})
+    assert rep.preemptions >= 1 and rep.recoveries == 1
+    assert rep.tokens == big.tokens
+
+
+@pytest.mark.slow
+def test_disaggregated_prefix_reuse(served):
+    """Prompt-side workers keep their own tiers in disaggregated mode, so
+    reuse works there too (prefill happens on the prompt pipeline)."""
+    import jax
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    engine, mkreqs, baseline = served
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(CFG, model, params, 4, mode="disaggregated",
+                        dp_split=(2, 2), paged=True, tiered=True,
+                        kv_pool_blocks=128, host_cache_blocks=16)
+    rep = eng.run_continuous(mkreqs(), max_active=1)
+    assert rep.tokens == baseline.tokens
+    assert rep.prefill_tokens_saved > 0
+
+
+# ---------------------------------------------------------------------------
+# planner: tier capacities + promotion latency terms
+# ---------------------------------------------------------------------------
+
+def test_tiered_token_depth_never_worse():
+    cfg = PAPER_ARCHS["opt-66b"]
+    wl = cm.WorkloadSpec(prompt_len=200, new_tokens=2000, microbatch=32)
+    mach = MachineSpec()
+    tiers = TierSpec(host_blocks=4096, ssd_blocks=16384)
+    dt_flat = min_token_depth(cfg, wl, mach, paged=True)
+    dt_tier = min_token_depth(cfg, wl, mach, paged=True, tiers=tiers)
+    assert 0 < dt_tier <= dt_flat
+
+
+def test_prefix_hit_rate_never_slows_prompt_bound_plan():
+    cfg = PAPER_ARCHS["opt-66b"]
+    wl = cm.WorkloadSpec(prompt_len=3000, new_tokens=32, microbatch=8)
+    base = plan(cfg, wl, 8, paged=True)
+    hit = plan(cfg, wl, 8, paged=True, prefix_hit_rate=0.8)
+    assert base.feasible and hit.feasible
+    assert hit.inv_tp_disagg <= base.inv_tp_disagg
+
+
+def test_promotion_time_orders_by_tier():
+    cfg = PAPER_ARCHS["opt-66b"]
+    assert 0 < cm.promotion_time(cfg, 4, 1) < cm.promotion_time(cfg, 4, 2)
+    assert cm.write_behind_time(cfg, 4, 1) < cm.write_behind_time(cfg, 4, 2)

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Docs drift gate: every relative link in the repo's markdown must resolve.
+
+Scans README.md, docs/*.md, and benchmarks/README.md for markdown links
+``[text](target)`` and checks that every non-URL target exists relative to
+the file that references it (anchors are stripped; bare #anchors and
+http(s)/mailto links are skipped).  Exits non-zero listing every dangling
+link.  CI runs this next to ``python -m compileall src`` so a renamed
+module or document fails fast.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: str):
+    files = [os.path.join(root, "README.md"),
+             os.path.join(root, "benchmarks", "README.md")]
+    files += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_file(path: str):
+    bad = []
+    text = open(path, encoding="utf-8").read()
+    # fenced code blocks routinely contain pseudo-links (e.g. arrays) — skip
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            bad.append((target, resolved))
+    return bad
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    failures = []
+    files = doc_files(root)
+    for f in files:
+        for target, resolved in check_file(f):
+            failures.append(f"{os.path.relpath(f, root)}: link '{target}' "
+                            f"-> missing '{os.path.relpath(resolved, root)}'")
+    if failures:
+        print("dangling documentation links:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"docs check: {len(files)} files, all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
