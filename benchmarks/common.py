@@ -1,12 +1,25 @@
-"""Shared benchmark helpers: CSV emission + default scenario constants."""
+"""Shared benchmark helpers: CSV emission (+ JSON artifact capture) and
+timing.
+
+Every `emit` row is also recorded in memory; when the ``BENCH_JSON_DIR``
+environment variable is set, the rows are written at interpreter exit to
+``$BENCH_JSON_DIR/<script-stem>.json`` so CI can upload the per-PR perf
+trajectory as a workflow artifact without re-running anything.
+"""
 from __future__ import annotations
 
+import atexit
+import json
+import os
+import sys
 import time
-from typing import Iterable
+
+_ROWS: list = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
 
 
 def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
@@ -16,3 +29,28 @@ def timeit(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     for _ in range(iters):
         fn(*args)
     return (time.perf_counter() - t0) / iters * 1e6   # µs
+
+
+def flush_json(name: str) -> None:
+    """Write (and clear) the rows emitted so far to ``$BENCH_JSON_DIR/
+    <name>.json``.  The `benchmarks.run` harness calls this after each
+    module so the full-suite job still produces per-module artifacts; a
+    directly-invoked module relies on the atexit hook below instead."""
+    out_dir = os.environ.get("BENCH_JSON_DIR")
+    if not out_dir:
+        _ROWS.clear()
+        return
+    if not _ROWS:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w", encoding="utf-8") as f:
+        json.dump(_ROWS, f, indent=1)
+    _ROWS.clear()
+
+
+def _write_json_rows() -> None:
+    stem = os.path.splitext(os.path.basename(sys.argv[0]))[0] or "bench"
+    flush_json(stem)
+
+
+atexit.register(_write_json_rows)

@@ -1,13 +1,17 @@
 """Benchmark runner — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
-``python -m benchmarks.run [--only fig12]``.
+``python -m benchmarks.run [--only fig12]``.  A failing sub-benchmark gate
+(assertion or crash) is reported inline, the remaining modules still run,
+and the process exits non-zero so CI fails on any regressed gate.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+from benchmarks.common import flush_json
 
 MODULES = [
     ("fig2_prompt_vs_token", "benchmarks.prompt_vs_token"),
@@ -18,28 +22,35 @@ MODULES = [
     ("appB_planner_study", "benchmarks.planner_study"),
     ("continuous_batching", "benchmarks.continuous_batching"),
     ("tiered_kv", "benchmarks.tiered_kv"),
+    ("chunked_prefill", "benchmarks.chunked_prefill"),
     ("kernels", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline"),
 ]
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter over benchmark names")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    failed = []
     for name, modpath in MODULES:
         if args.only and args.only not in name:
             continue
         t0 = time.time()
-        mod = __import__(modpath, fromlist=["run"])
         try:
+            mod = __import__(modpath, fromlist=["run"])
             mod.run()
         except Exception as e:  # keep the harness going, report the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
+            failed.append(name)
         print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},", flush=True)
+        flush_json(name)        # per-module JSON artifact even under -m run
+    if failed:
+        print(f"FAILED gates: {', '.join(failed)}", file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -73,6 +73,17 @@ def measured_study():
     rt = tier.run_continuous(mkreqs(), max_active=1)
 
     assert rb.tokens == rt.tokens, "tiered outputs diverged from baseline"
+    # adoption-suffix-speed gate: every adopted prompt's unmatched suffix must
+    # complete in ceil(suffix / prefill_chunk_tokens) chunked pipeline passes
+    # (one per suffix token before the chunked paged-prefill kernel)
+    ck = max(cfg.prefill_chunk_tokens, 1)
+    log = tier.cluster.adoption_suffix_log
+    assert log, "no prefix adoptions happened — the reuse trace broke"
+    assert all(p <= -(-s // ck) for s, p in log), (
+        f"adopted suffixes exceeded the chunked pass bound: {log}")
+    emit("tiered_adoption_suffix_passes", 0.0,
+         f"{sum(p for _, p in log)} passes for "
+         f"{sum(s for s, _ in log)} suffix tokens (chunk={ck})")
     saved_frac = rt.prefill_tokens_saved / rt.prefill_tokens_total
     ts = rt.tier_stats
     hit_blocks = ts.get("host_hits", 0) + ts.get("ssd_hits", 0)

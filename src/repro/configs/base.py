@@ -54,6 +54,12 @@ class ArchConfig:
     # --- paged KV cache (serving) ---
     kv_block_size: int = 8                   # tokens per KV block (DMA-aligned)
     kv_pool_blocks: int = 0                  # pool size per stage; 0 = auto
+    # Q tokens per chunked-prefill pipeline pass (paged serving).  Prompts and
+    # adopted-prefix suffixes longer than this are split into chunks that the
+    # continuous-batching scheduler interleaves with decode steps, bounding
+    # how long a long prompt stalls in-flight decodes.  0 disables chunking
+    # (cold prompts prefill in one pass, adopted suffixes run token-at-a-time).
+    prefill_chunk_tokens: int = 64
     # --- misc ---
     dtype: str = "bfloat16"
     max_seq_len: int = 524288

@@ -43,7 +43,8 @@ class DejaVuCluster:
                  kv_pool_blocks: Optional[int] = None,
                  tiered: bool = False,
                  host_cache_blocks: Optional[int] = None,
-                 ssd_cache_blocks: Optional[int] = None):
+                 ssd_cache_blocks: Optional[int] = None,
+                 prefill_chunk_tokens: Optional[int] = None):
         assert mode in ("colocated", "disaggregated")
         if mode == "disaggregated":
             assert dp_split is not None and sum(dp_split) == n_workers
@@ -64,6 +65,9 @@ class DejaVuCluster:
                                    ssd_capacity_blocks=ssd_cache_blocks)
         self.kv_block_size = kv_block_size or cfg.kv_block_size
         self.kv_pool_blocks = kv_pool_blocks or cfg.kv_pool_blocks or 512
+        self.prefill_chunk_tokens = (cfg.prefill_chunk_tokens
+                                     if prefill_chunk_tokens is None
+                                     else prefill_chunk_tokens)
         self.streamer = StreamEngine("cluster")
         self.controller = Controller()
         self.net = NetworkTransport(hw)
@@ -94,6 +98,11 @@ class DejaVuCluster:
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
         self.prefix_hit_blocks = 0
+        # chunked-prefill accounting + in-flight (engine-interleaved) state
+        self._pending_prefill: Dict[int, dict] = {}
+        self.prefill_passes: Dict[int, int] = {}     # rid -> passes last prefill
+        self.adoption_suffix_log: List[Tuple[int, int]] = []  # (suffix_toks, passes)
+        self.round_prefill_model_s = 0.0   # modeled prefill s this round (engine resets)
 
     # ------------------------------------------------------------------
     def live_kv_bytes(self) -> int:
@@ -228,13 +237,34 @@ class DejaVuCluster:
         return all(w.pool.num_free() >= need for w in self.token_group)
 
     def prefill_seq(self, rid: int, prompt: np.ndarray, max_new: int) -> jnp.ndarray:
-        """Prefill ONE request through the prompt pipeline into pool blocks;
-        in disaggregated mode only its live blocks cross to the token side.
+        """Prefill ONE request through the prompt pipeline into pool blocks,
+        running every pipeline pass back-to-back (the engine's interleaved
+        scheduler calls `prefill_seq_begin`/`prefill_seq_step` itself so
+        decode steps can run between chunks)."""
+        self.prefill_seq_begin(rid, prompt, max_new)
+        logits = None
+        while logits is None:
+            logits = self.prefill_seq_step(rid)
+        return logits
 
+    def _chunkable(self) -> bool:
+        """Chunked prefill is exact only where the decode path is (same
+        restriction as prefix adoption): full-causal attention families."""
+        return (self.prefill_chunk_tokens > 0
+                and self.cfg.family in ("dense", "moe")
+                and not self.cfg.context_overhead)
+
+    def prefill_seq_begin(self, rid: int, prompt: np.ndarray,
+                          max_new: int) -> None:
+        """Stage a prefill for `prefill_seq_step` to advance pass by pass.
         With tiering, the prompt's prefix-chain hashes are first matched
         against live pool blocks AND the host/SSD tiers of every prompt-side
         stage; a matching prefix is adopted (streamed back up the hierarchy)
-        and only the remaining suffix runs through compute."""
+        and only the remaining suffix runs through compute — chunked,
+        `prefill_chunk_tokens` Q tokens per pass (vs one pass per suffix
+        token with the knob at 0, the oracle path property tests compare
+        against).  Cold prompts longer than the chunk are split the same way
+        so the scheduler can interleave decodes between passes."""
         assert self.paged, "prefill_seq requires paged=True"
         plen = int(prompt.shape[0])
         self.seq_prompt_len[rid] = plen
@@ -246,14 +276,79 @@ class DejaVuCluster:
             if rid in w.pool.tables:
                 w.free_paged_seq(rid)
         self.prefill_tokens_total += plen
+        ck = self.prefill_chunk_tokens
         khashes = self._adoptable_prefix(token_ids)
+        st = {"prompt": np.asarray(prompt, np.int32), "plen": plen,
+              "start": 0, "pos": 0, "passes": 0, "x": None}
         if khashes:
-            logits = self._prefill_adopted(rid, prompt, khashes)
-        else:
-            x = jnp.asarray(prompt)[None]
+            start = len(khashes) * self.kv_block_size
             for w in self.prompt_group:
-                x, _ = w.prefill_paged(rid, x, token_ids=token_ids)
-            logits = x
+                w.adopt_prefix(rid, khashes, start)
+            self.prefix_hit_blocks += len(khashes)
+            self.prefill_tokens_saved += start
+            st["start"] = st["pos"] = start
+            if ck > 0:
+                st["mode"] = "chunk"
+                for w in self.prompt_group:
+                    w.ensure_prefill_table(rid, plen)
+            else:
+                st["mode"] = "token"
+        elif self._chunkable() and plen > ck:
+            st["mode"] = "chunk"
+            for w in self.prompt_group:
+                w.ensure_prefill_table(rid, plen, token_ids=token_ids)
+        else:
+            st["mode"] = "batch"
+        self._pending_prefill[rid] = st
+
+    def prefill_seq_step(self, rid: int) -> Optional[jnp.ndarray]:
+        """Run ONE pipeline pass of a staged prefill: the whole prompt
+        (batch mode), one `prefill_chunk_tokens` chunk attending over the
+        pool-resident prefix, or one suffix token through the decode path.
+        Returns the prefill logits once the prompt is fully processed (and
+        the post-prefill block streaming/replication/swap have run), else
+        None — the engine interleaves decode steps between calls."""
+        st = self._pending_prefill[rid]
+        plen, pos = st["plen"], st["pos"]
+        if st["mode"] == "batch":
+            x = jnp.asarray(st["prompt"])[None]
+            for w in self.prompt_group:
+                x, _ = w.prefill_paged(rid, x,
+                                       token_ids=[int(t) for t in st["prompt"]])
+            st["pos"], n_q = plen, plen
+        elif st["mode"] == "chunk":
+            c = min(self.prefill_chunk_tokens, plen - pos)
+            x = jnp.asarray(st["prompt"][pos:pos + c])[None]
+            for w in self.prompt_group:
+                x = w.prefill_chunk_paged(rid, x, pos)
+            st["pos"], n_q = pos + c, c
+            if st["start"] == 0:
+                # cold chunked prefill: publish hashes of the blocks whose
+                # pages this pass completed (adopted suffix blocks were never
+                # published on the batched path either)
+                for w in self.prompt_group:
+                    w.publish_prefix_hashes(rid, self.seq_hashes[rid],
+                                            st["pos"])
+        else:                            # token-at-a-time oracle path
+            x = jnp.asarray(st["prompt"][pos:pos + 1])
+            for w in self.prompt_group:
+                x = w.decode_paged(rid, x, pos)
+            st["pos"], n_q = pos + 1, 1
+        st["x"] = x
+        st["passes"] += 1
+        self.round_prefill_model_s += cm.chunked_prefill_pass_time(
+            self.cfg, n_q, st["pos"], self.cfg.num_layers, 8, self.hw)
+        if st["pos"] < plen:
+            return None
+        return self._finish_prefill(rid)
+
+    def _finish_prefill(self, rid: int) -> jnp.ndarray:
+        st = self._pending_prefill.pop(rid)
+        plen, start = st["plen"], st["start"]
+        self.prefill_passes[rid] = st["passes"]
+        if start > 0:
+            self.adoption_suffix_log.append((plen - start, st["passes"]))
+            self._register_compute(plen - start, plen)
         if self.mode == "disaggregated":
             self._stream_prompt_blocks(rid, plen)
         if self.replication:
@@ -262,7 +357,18 @@ class DejaVuCluster:
             for w in self.token_group:
                 w.paged_offload(rid)
         self._track_kv_peak()
-        return logits
+        return st["x"]
+
+    def prefill_pending(self, rid: int) -> bool:
+        return rid in self._pending_prefill
+
+    def abort_prefill(self, rid: int) -> None:
+        """Drop an in-flight prefill (e.g. a worker died mid-chunk and took
+        the partial tables with it); the engine re-begins from scratch."""
+        self._pending_prefill.pop(rid, None)
+        for w in self.prompt_group:
+            if rid in w.pool.tables:
+                w.free_paged_seq(rid)
 
     def _adoptable_prefix(self, token_ids: List[int]) -> List[int]:
         """Prefix-chain hashes (full blocks) every prompt-side stage can
@@ -278,28 +384,6 @@ class DejaVuCluster:
             return []
         k = min(w.adoptable_prefix_len(hashes) for w in self.prompt_group)
         return hashes[:k]
-
-    def _prefill_adopted(self, rid: int, prompt: np.ndarray,
-                         hashes: List[int]) -> jnp.ndarray:
-        """Skip prefill compute for an adopted prefix: its KV blocks are
-        ref-shared or promoted out of the tier hierarchy, and only the
-        suffix tokens run — token-identical to a full prefill (the decode
-        path attends over exactly the same cache), minus
-        ``len(hashes) * block_size`` tokens of prompt compute."""
-        bs = self.kv_block_size
-        start = len(hashes) * bs
-        plen = self.seq_prompt_len[rid]
-        for w in self.prompt_group:
-            w.adopt_prefix(rid, hashes, start)
-        self.prefix_hit_blocks += len(hashes)
-        self.prefill_tokens_saved += start
-        x = None
-        for pos in range(start, plen):
-            x = jnp.asarray(np.asarray(prompt[pos:pos + 1], np.int32))
-            for w in self.prompt_group:
-                x = w.decode_paged(rid, x, pos)
-        self._register_compute(plen - start, plen)
-        return x
 
     def _register_compute(self, n_tokens: int, ctx: int) -> None:
         """Report modeled compute time to the streamer so its overlap report
@@ -400,6 +484,7 @@ class DejaVuCluster:
         self.seq_len.pop(rid, None)
         self.seq_prompt_len.pop(rid, None)
         self.seq_hashes.pop(rid, None)
+        self._pending_prefill.pop(rid, None)
 
     def pool_stats(self) -> Dict[str, int]:
         used = max((w.pool.num_used() for w in self.token_group), default=0)

@@ -84,6 +84,74 @@ def swap_transfer_time(cfg: ArchConfig, wl: WorkloadSpec, n_layers: int,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (prefill-with-prefix-cache + chunk-interleaved scheduling)
+# ---------------------------------------------------------------------------
+
+def chunked_prefill_pass_time(cfg: ArchConfig, n_q: int, ctx: int,
+                              n_layers: int, chips: int,
+                              hw: HardwareModel = DEFAULT_HW,
+                              mfu: float = 0.5) -> float:
+    """One chunked-prefill pipeline pass: `n_q` new Q tokens ending at
+    absolute context position `ctx` — compute-bound like Y.  The attention
+    term is EXACT causal accounting (query at position p reads p+1 KV
+    slots), so summing passes over a prompt gives the same FLOPs no matter
+    how it is chunked — chunking's only modeled overhead is the per-pass
+    dispatch latency `chunked_prefill_time` adds."""
+    n_q = max(n_q, 0)
+    per_layer_params = cfg.active_param_count() / max(cfg.num_layers, 1)
+    flops = 2.0 * per_layer_params * n_q * n_layers
+    if cfg.family != "ssm":
+        # sum_{p=ctx-n_q..ctx-1} (p+1) = n_q*(ctx - n_q) + n_q*(n_q+1)/2
+        kv_reads = n_q * max(ctx - n_q, 0) + n_q * (n_q + 1) / 2.0
+        flops += 2.0 * kv_reads * cfg.q_dim * n_layers
+    return flops / (chips * hw.peak_flops * mfu)
+
+
+def chunked_prefill_time(cfg: ArchConfig, plen: int, chunk: int,
+                         n_layers: int, chips: int,
+                         hw: HardwareModel = DEFAULT_HW, mfu: float = 0.5,
+                         start: int = 0) -> float:
+    """Total prompt-processing time when tokens [start, plen) run in
+    fixed-size chunks: the matmul/attention FLOPs equal the one-pass prefill
+    of the same tokens (exact causal accounting above), plus one
+    pipeline-dispatch latency per pass — the price chunking pays for
+    bounding decode stalls (`chunk<=0` means one unchunked pass)."""
+    chunk = chunk if chunk > 0 else max(plen - start, 1)
+    total, pos = 0.0, start
+    while pos < plen:
+        c = min(chunk, plen - pos)
+        total += chunked_prefill_pass_time(cfg, c, pos + c, n_layers, chips,
+                                           hw, mfu)
+        total += hw.net_latency           # per-pass stage-hop/dispatch cost
+        pos += c
+    return total
+
+
+def prefill_stall_time(cfg: ArchConfig, wl: WorkloadSpec, chunk: int,
+                       n_layers: int, chips: int,
+                       hw: HardwareModel = DEFAULT_HW,
+                       mfu: float = 0.5) -> float:
+    """Longest a co-scheduled decode step waits behind an in-flight prompt
+    pass: the final chunk (worst context) of every prompt in the microbatch
+    with interleaving, the whole prompt without."""
+    n_q = (min(chunk, wl.prompt_len) if chunk > 0 else wl.prompt_len)
+    return wl.microbatch * chunked_prefill_pass_time(
+        cfg, n_q, wl.prompt_len, n_layers, chips, hw, mfu)
+
+
+def prefill_bubble_frac(cfg: ArchConfig, wl: WorkloadSpec, chunk: int,
+                        n_layers: int, chips: int, ctx: int,
+                        hw: HardwareModel = DEFAULT_HW, mfu: float = 0.5,
+                        beff: float = 0.7) -> float:
+    """Fraction of a co-scheduled decode round occupied by an in-flight
+    prefill pass (the pipeline 'bubble' a decode step waits out), computed
+    from the SAME stall `prefill_stall_time` reports.  In [0, 1)."""
+    stall = prefill_stall_time(cfg, wl, chunk, n_layers, chips, hw, mfu)
+    t = stage_token_time(cfg, wl, n_layers, chips, ctx, hw, beff)
+    return stall / max(stall + t, 1e-30)
+
+
+# ---------------------------------------------------------------------------
 # tiered KV-cache hierarchy (HBM -> host -> SSD; repro.kvcache.tiers)
 # ---------------------------------------------------------------------------
 

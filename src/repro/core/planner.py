@@ -58,6 +58,11 @@ class Plan:
     inv_tp_disagg: float         # I_dis
     prompt_stage_time: float     # Y_dis / D_p
     token_stage_time: float      # t_dis / D_t
+    # colocated decode-stall bound: the longest a decode step can wait behind
+    # an in-flight prompt pass (one chunk with chunk-interleaving, the whole
+    # prompt without) and the bubble fraction of a decode round it implies
+    decode_stall_s: float = 0.0
+    bubble_frac: float = 0.0
     note: str = ""
 
     @property
@@ -141,7 +146,8 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
          mach: MachineSpec = MachineSpec(), hw: HardwareModel = DEFAULT_HW,
          mfu: float = 0.5, beff: float = 0.7, *, paged: bool = False,
          kv_util: float = 0.5, tiers: Optional[TierSpec] = None,
-         prefix_hit_rate: float = 0.0, prefix_src_tier: int = 1) -> Plan:
+         prefix_hit_rate: float = 0.0, prefix_src_tier: int = 1,
+         prefill_chunk_tokens: int = 0) -> Plan:
     """`paged=True` plans against the paged pool's live-block footprint
     (continuous batching) instead of the static prompt+new reservation —
     the same D often becomes feasible at larger microbatches.
@@ -150,7 +156,12 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
     token-side HBM requirement (Eq. 2's K_0 shrinks to the hot working set),
     and `prefix_hit_rate` models cross-request prefix reuse: that fraction
     of every prompt is served by promoting cached blocks from
-    `prefix_src_tier` instead of prefill compute."""
+    `prefix_src_tier` instead of prefill compute.
+
+    `prefill_chunk_tokens` (0 = no chunking) bounds the colocated
+    decode-stall: with chunk-interleaved scheduling a decode step waits at
+    most one chunk pass of a co-scheduled prompt, not the whole prompt —
+    reported as `Plan.decode_stall_s` / `Plan.bubble_frac`."""
     l = cfg.num_layers
     ctx = wl.prompt_len + wl.new_tokens
     # whole-model times with all D machines (the paper's Y and t)
@@ -158,12 +169,17 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
     t = cm.stage_token_time(cfg, wl, l, d * mach.chips, ctx, hw, beff)
     n = wl.new_tokens
     ic = colocated_inverse_throughput(d, y, t, n)
+    stall = cm.prefill_stall_time(cfg, wl, prefill_chunk_tokens, l,
+                                  d * mach.chips, hw, mfu)
+    bubble = cm.prefill_bubble_frac(cfg, wl, prefill_chunk_tokens, l,
+                                    d * mach.chips, ctx, hw, mfu, beff)
 
     dp_min = min_prompt_depth(cfg, wl, mach)
     dt_min = min_token_depth(cfg, wl, mach, paged=paged, kv_util=kv_util,
                              tiers=tiers)
     if dt_min < 0 or dp_min + max(dt_min, 1) > d:
         return Plan(d, 0, 0, False, False, 1.0, ic, float("inf"), 0, 0,
+                    decode_stall_s=stall, bubble_frac=bubble,
                     note="memory-infeasible for this D")
 
     # continuous optimum (Eq. 5) then integer search subject to Eqs. 1–2;
@@ -184,7 +200,8 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
         i_t = n * t_dis
         i_dis = max(i_p, i_t)
         cand = Plan(d, dp, dt, True, i_dis < ic, m, ic, i_dis,
-                    y_dis / dp, t_dis / dt)
+                    y_dis / dp, t_dis / dt,
+                    decode_stall_s=stall, bubble_frac=bubble)
         if best is None or cand.inv_tp_disagg < best.inv_tp_disagg:
             best = cand
     assert best is not None

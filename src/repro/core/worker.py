@@ -231,11 +231,17 @@ class StageWorker:
                 sp, None, first=True, last=last, tokens=tokens))
             self._decode = jax.jit(lambda sp, token, kc, vc, pos: mf.stage_decode(
                 sp, None, kc, vc, pos, first=True, last=last, token=token))
+            self._prefill_chunk = jax.jit(
+                lambda sp, tokens, kc, vc, pos: mf.stage_prefill_chunk(
+                    sp, None, kc, vc, pos, first=True, last=last, tokens=tokens))
         else:
             self._prefill = jax.jit(lambda sp, x: mf.stage_prefill(
                 sp, x, first=False, last=last))
             self._decode = jax.jit(lambda sp, x, kc, vc, pos: mf.stage_decode(
                 sp, x, kc, vc, pos, first=False, last=last))
+            self._prefill_chunk = jax.jit(
+                lambda sp, x, kc, vc, pos: mf.stage_prefill_chunk(
+                    sp, x, kc, vc, pos, first=False, last=last))
 
     # ------------------------------------------------------------------
     def heartbeat(self) -> bool:
@@ -336,6 +342,61 @@ class StageWorker:
                                       "v": np.asarray(vs[:, 0])}, 0)
         self.paged_dirty[seq] = {j for j, _, _, _ in self.pool.block_span(seq)}
         return x, len(fresh)
+
+    def ensure_prefill_table(self, seq: int, plen: int, token_ids=None) -> None:
+        """Size `seq`'s block table for the WHOLE prompt before chunked
+        prefill: a cold prompt allocates fresh (with `token_ids`, full blocks
+        whose prefix hash is live are ref-shared, like `prefill_paged` — but
+        fresh blocks are NOT published until their pages are written, see
+        `publish_prefix_hashes`); an adopted-prefix table (block-aligned,
+        from `adopt_prefix`) is appended out to the full prompt length.
+        Raises PoolExhausted before mutating."""
+        self._check()
+        if seq not in self.pool.tables:
+            self.pool.allocate(seq, plen, token_ids=token_ids, publish=False)
+            self.paged_dirty.setdefault(seq, set())
+            return
+        have = self.pool.seq_lens[seq]
+        if plen > have:
+            cow = self.pool.append(seq, plen - have)
+            self.pages.apply_cow(cow)
+
+    def publish_prefix_hashes(self, seq: int, hashes, upto_tokens: int) -> None:
+        """Publish the prefix hashes of the prompt blocks whose pages are
+        fully WRITTEN (the chunked-prefill cursor has passed them).  Blocks
+        beyond the cursor stay unpublished so a concurrent allocate/adopt —
+        or an abort-time demotion into the tier prefix cache — can never
+        touch unwritten pages."""
+        n = min(len(hashes), upto_tokens // self.pool.block_size)
+        if n > 0:
+            self.pool.publish_hashes(seq, hashes[:n])
+
+    def prefill_chunk_paged(self, seq: int, x_or_tokens, pos0: int):
+        """One chunk [pos0, pos0+C) of a paged prefill: densify the pool
+        pages, run the chunked stage fn (the chunk attends over the resident
+        prefix plus itself — `paged_prefill_attention` semantics), and
+        scatter the chunk's K/V window back into its pages through kv_pack
+        (DMA-aligned; the re-written head tokens of the aligned window hold
+        identical values).  Requires `ensure_prefill_table` first."""
+        self._check()
+        from repro.kernels import ops as kops
+        c = int(x_or_tokens.shape[1])
+        bs = self.pool.block_size
+        pad_to = len(self.pool.tables[seq]) * bs
+        dense = self.pages.gather_dense(seq, pad_to)
+        x, kc, vc = self._prefill_chunk(self.sp, x_or_tokens,
+                                        jnp.asarray(dense["k"]),
+                                        jnp.asarray(dense["v"]),
+                                        jnp.int32(pos0))
+        tb = self.cache.token_block
+        t0a = (pos0 // tb) * tb
+        w = min(-(-(pos0 + c - t0a) // tb) * tb, pad_to - t0a)
+        win = {"k": np.asarray(kops.kv_pack_auto(kc, t0a, w, token_block=tb))[:, 0],
+               "v": np.asarray(kops.kv_pack_auto(vc, t0a, w, token_block=tb))[:, 0]}
+        self.pages.write_window(seq, win, t0a)
+        self.paged_dirty.setdefault(seq, set()).update(
+            range(t0a // bs, -(-(pos0 + c) // bs)))
+        return x
 
     def decode_paged(self, seq: int, x_or_token, pos: int):
         """One decode step for one sequence: append a slot (CoW if the tail

@@ -1,6 +1,9 @@
 # Pallas TPU kernels for the paper's compute/DMA hot spots:
 #   kv_pack / kv_unpack   — DéjàVuLib buffered copies (paper §4.1 opt-1)
 #   flash_attention       — prefill (compute-bound phase)
-#   decode_attention      — token generation (bandwidth-bound phase)
+#   decode_attention      — token generation (bandwidth-bound phase),
+#                           incl. paged_decode_attention (block-table gather)
+#   paged_prefill         — chunked prefill over the paged pool (a Q chunk
+#                           attends over a pool-resident prefix + itself)
 #   ssd_scan              — Mamba-2 chunked SSD (assigned-arch substrate)
 # ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.

@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import decode_attention, paged_decode_attention
 from repro.kernels.kv_pack import kv_pack, kv_unpack
+from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 # flip to False on real TPU devices
@@ -52,6 +53,14 @@ def paged_decode_attention_auto(q, k_pages, v_pages, block_tables, lengths):
     out = paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
                                  interpret=INTERPRET)
     return out[:, None] if squeeze else out
+
+
+def paged_prefill_attention_auto(q, k_pages, v_pages, block_tables, q_starts,
+                                 q_lens):
+    """Chunked paged-prefill entry point.  q: [B,C,Hq,D]; the chunk's own
+    K/V window must already be scattered into the pages (via kv_pack)."""
+    return paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                   q_starts, q_lens, interpret=INTERPRET)
 
 
 def ssd_auto(x, dt, a_neg, bmat, cmat, chunk=128, h0=None):

@@ -1,0 +1,114 @@
+"""Chunked paged-prefill attention (prefill-with-prefix-cache hot path).
+
+A chunk of C new prompt tokens attends causally over (a) an arbitrary-length
+prefix already resident in the paged pool — gathered per logical block
+through the sequence's block table, exactly like `paged_decode_attention` —
+and (b) itself.  The chunk's own K/V are written into pool pages *before*
+the call (via `kv_pack` windows), so the kernel reads one uniform paged
+stream: slot j of logical block ik holds absolute token ik*bs + j, valid for
+query row at absolute position p iff slot <= p.
+
+This is what makes prefix adoption strictly cheaper than a cold prefill:
+the adopted prefix costs only the page reads it would cost anyway, while the
+suffix runs in ceil(suffix/C) passes instead of one pipeline pass per token
+(DéjàVu's prompt/token bimodality argument, applied to the recovery/reuse
+path).  Grid (B, Hkv, kv_blocks) with the online-softmax state for the
+chunk's C*G query rows carried in VMEM scratch; block tables + chunk
+positions ride scalar prefetch so each grid step DMAs exactly one page.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _paged_prefill_kernel(bt_ref, qs_ref, ql_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, scale, block_size, group):
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)            # [C*G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bs, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # [C*G, bs]
+    cg = s.shape[0]
+    # row r is group member r%G of chunk-local query r//G, at absolute
+    # position q_start + r//G; slot j of logical block ik is token ik*bs + j
+    row = jax.lax.broadcasted_iota(jnp.int32, (cg, block_size), 0)
+    qpos = qs_ref[bi] + row // group
+    slot = ik * block_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (cg, block_size), 1)
+    valid = (slot <= qpos) & (slot < qs_ref[bi] + ql_ref[bi])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0, :, :] = (acc_ref[...]
+                             / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, q_starts,
+                            q_lens, *, interpret: bool = True):
+    """Chunked prefill attention over a paged KV cache.
+
+    q: [B,C,Hq,D] — chunk of new queries; query i of sequence b sits at
+    absolute position ``q_starts[b] + i``.  k_pages/v_pages: [N,bs,Hkv,D]
+    shared page pool ALREADY holding the chunk's own K/V window (the caller
+    scatters it via kv_pack before attending); block_tables: [B,max_blocks]
+    int32 (pad unused tail entries with any valid page id); q_starts/q_lens:
+    [B] int32 — prefix length and valid chunk length per sequence.
+    -> [B,C,Hq,D]; rows past q_lens[b] are don't-care.
+    """
+    b, c, hq, d = q.shape
+    n, bs, hkv, _ = k_pages.shape
+    g = hq // hkv
+    max_blocks = block_tables.shape[1]
+    # [B,C,Hkv,G,D] -> [B,Hkv,C*G,D]: row r = (query r//G, group member r%G)
+    qg = q.reshape(b, c, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, c * g, d)
+    grid = (b, hkv, max_blocks)
+
+    q_spec = pl.BlockSpec((1, 1, c * g, d),
+                          lambda bi, h, ik, bt, qs, ql: (bi, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, bs, 1, d),
+                           lambda bi, h, ik, bt, qs, ql: (bt[bi, ik], 0, h, 0))
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, scale=d ** -0.5,
+                          block_size=bs, group=g),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3, grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec],
+            out_specs=pl.BlockSpec((1, 1, c * g, d),
+                                   lambda bi, h, ik, bt, qs, ql: (bi, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((c * g,), jnp.float32),
+                pltpu.VMEM((c * g,), jnp.float32),
+                pltpu.VMEM((c * g, d), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * g, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(q_starts, jnp.int32),
+      jnp.asarray(q_lens, jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(b, hkv, c, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, c, hq, d)

@@ -88,6 +88,36 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths):
 
 
 # ---------------------------------------------------------------------------
+# paged prefill attention (chunk of Q tokens vs paged prefix + itself)
+# ---------------------------------------------------------------------------
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables, q_starts,
+                                q_lens):
+    """q: [B,C,Hq,D] chunk of new queries; query i of sequence b sits at
+    absolute position ``q_starts[b] + i`` and attends causally over the
+    paged KV [0, q_starts[b] + q_lens[b]) (the chunk's own K/V must already
+    be resident in the pages).  k/v_pages: [N,bs,Hkv,D]; block_tables:
+    [B,max_blocks]; q_lens: [B] valid queries per chunk -> [B,C,Hq,D].
+    Rows past q_lens[b] are don't-care (the caller slices them off)."""
+    b, c, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    k = paged_gather_ref(k_pages, block_tables)
+    v = paged_gather_ref(v_pages, block_tables)
+    s = k.shape[1]
+    qpos = q_starts[:, None] + jnp.arange(c)[None, :]              # [B,C]
+    kvpos = jnp.arange(s)[None, None, :]                           # [1,1,S]
+    valid = (kvpos <= qpos[:, :, None]) \
+        & (kvpos < (q_starts + q_lens)[:, None, None])             # [B,C,S]
+    qg = q.reshape(b, c, hkv, g, d)
+    scores = jnp.einsum("bchgd,bkhd->bhgck", qg, k).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgck,bkhd->bchgd", probs, v)
+    return out.reshape(b, c, hq, d)
+
+
+# ---------------------------------------------------------------------------
 # SSD — sequential recurrence oracle (independent of the chunked algorithm)
 # ---------------------------------------------------------------------------
 
@@ -98,12 +128,13 @@ def ssd_sequential_ref(x, dt, a_neg, bmat, cmat, h0=None):
     g, n = bmat.shape[-2:]
     rep = nh // g
     h = jnp.zeros((b, nh, hd, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    a32 = a_neg.astype(jnp.float32)     # keep the scan carry f32 under x64
 
     def step(h, inp):
         xt, dtt, bt, ct = inp                      # [b,nh,hd], [b,nh], [b,g,n]
         bt_h = jnp.repeat(bt, rep, axis=1).astype(jnp.float32)
         ct_h = jnp.repeat(ct, rep, axis=1).astype(jnp.float32)
-        da = jnp.exp(dtt.astype(jnp.float32) * a_neg)
+        da = jnp.exp(dtt.astype(jnp.float32) * a32)
         h = h * da[:, :, None, None] + (dtt.astype(jnp.float32)[:, :, None, None]
                                         * xt.astype(jnp.float32)[:, :, :, None]
                                         * bt_h[:, :, None, :])

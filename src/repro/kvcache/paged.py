@@ -126,7 +126,8 @@ class BlockPool:
 
     def allocate(self, seq: int, num_tokens: int,
                  token_ids: Optional[Sequence[int]] = None,
-                 hashes: Optional[Sequence[int]] = None) -> Tuple[List[int], List[int]]:
+                 hashes: Optional[Sequence[int]] = None,
+                 publish: bool = True) -> Tuple[List[int], List[int]]:
         """Allocate a table for `seq` holding `num_tokens` live tokens.
 
         With `token_ids` (the prompt) — or a precomputed prefix-hash chain
@@ -135,6 +136,12 @@ class BlockPool:
         instead of newly allocated.  Returns ``(table, fresh)`` where `fresh`
         lists the logical block indices the caller must actually write
         (shared ones already hold the data).
+
+        ``publish=False`` still SHARES matching live blocks but does not
+        publish the fresh blocks' hashes: chunked prefill writes pages over
+        several passes, so it publishes each block via `publish_hashes` only
+        once the pages actually hold the data — a concurrent allocate/adopt
+        must never share unwritten pages.
         """
         assert seq not in self.tables, f"seq {seq} already allocated"
         n = blocks_for(num_tokens, self.block_size)
@@ -159,7 +166,7 @@ class BlockPool:
                 table.append(bid)
                 continue
             bid = self._take_block()
-            if h is not None:
+            if h is not None and publish:
                 self.blocks[bid].hash = h
                 self._hash_index[h] = bid
             table.append(bid)
@@ -168,6 +175,24 @@ class BlockPool:
         self.seq_lens[seq] = num_tokens
         self._track_peak()
         return table, fresh
+
+    def publish_hashes(self, seq: int, hashes: Sequence[int]) -> int:
+        """Publish prefix-chain hashes for the LEADING blocks of `seq` (one
+        hash per logical block, starting at block 0).  Chunked prefill calls
+        this as each block's pages complete, pairing with
+        ``allocate(..., publish=False)``.  Blocks already hashed (shared) and
+        hashes already in the index are skipped.  Returns #published."""
+        table = self.tables[seq]
+        n = 0
+        for j, h in enumerate(hashes):
+            if j >= len(table):
+                break
+            blk = self.blocks[table[j]]
+            if blk.hash is None and h not in self._hash_index:
+                blk.hash = h
+                self._hash_index[h] = table[j]
+                n += 1
+        return n
 
     def has_hash(self, h: int) -> bool:
         """Is a live block holding this prefix-chain hash resident (tier 0)?"""

@@ -203,20 +203,27 @@ def attention_prefill(x, p, cfg, positions, *, window: int = 0, num_meta: int = 
 def attention_decode(x, p, cfg, k_cache, v_cache, kv_positions, pos, *,
                      window: int = 0, num_meta: int = 0, rope: bool = True,
                      alibi=None, write_index=None, backend: str = "xla"):
-    """One-token decode. x: [B,1,d]; cache: [B,S,Hkv,Dh]; pos: scalar int32.
+    """Decode / chunked-prefill attention against a partially-filled cache.
 
-    write_index: where to write the new token's K/V (defaults to pos;
+    x: [B,C,d] — C=1 is the classic one-token decode; C>1 is a chunked
+    prefill step whose queries sit at absolute positions pos..pos+C-1 and
+    attend causally over the cache prefix plus themselves (the paged
+    `paged_prefill_attention` kernel computes the same thing over block
+    tables).  cache: [B,S,Hkv,Dh]; pos: scalar int32 position of x[:,0].
+
+    write_index: where to write the chunk's K/V (defaults to pos;
     ring-buffer caches pass their slot).  Returns (out, k_cache, v_cache).
     """
+    c = x.shape[1]
     q, k_new, v_new = qkv_proj(x, p, cfg)
+    posv = pos + jnp.arange(c, dtype=jnp.int32)
     if rope:
-        posv = jnp.full((1,), 0, jnp.int32) + pos
         q = apply_rope(q, posv[None, :], cfg.rope_theta)
         k_new = apply_rope(k_new, posv[None, :], cfg.rope_theta)
     wi = pos if write_index is None else write_index
     k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), wi, axis=1)
     v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), wi, axis=1)
-    q_pos = jnp.full((1,), 0, jnp.int32) + pos
+    q_pos = posv
     if backend == "blocked":
         o = attend_blocked(q, k_cache, v_cache, q_pos, kv_positions,
                            causal=True, window=window, num_meta=num_meta,
@@ -224,7 +231,7 @@ def attention_decode(x, p, cfg, k_cache, v_cache, kv_positions, pos, *,
         return out_proj(o, p), k_cache, v_cache
     mask = build_mask(q_pos, kv_positions, causal=True, window=window, num_meta=num_meta)
     bias = alibi_bias(alibi, q_pos, jnp.maximum(kv_positions, 0)) if alibi is not None else None
-    if backend == "pallas":
+    if backend == "pallas" and c == 1:
         from repro.kernels import ops as kops
         o = kops.decode_attention_auto(q, k_cache, v_cache, mask)
     else:

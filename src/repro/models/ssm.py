@@ -102,6 +102,7 @@ def ssd_chunked(x, dt, a_neg, bmat, cmat, chunk: int = DEFAULT_CHUNK, h0=None):
     b, s, nh, hd = x.shape
     g, n = bmat.shape[-2], bmat.shape[-1]
     rep = nh // g
+    a_neg = a_neg.astype(jnp.float32)   # keep the scan carry f32 under x64
     pad = (-s) % chunk
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -162,7 +163,7 @@ def ssd_decode_step(x, dt, a_neg, bmat, cmat, h):
     g = bmat.shape[1]
     rep = nh // g
     xf = logical_constraint(x.astype(jnp.float32), None, "ssm_heads", None)
-    da = jnp.exp(dt.astype(jnp.float32) * a_neg)       # [B,nh]
+    da = jnp.exp(dt.astype(jnp.float32) * a_neg.astype(jnp.float32))   # [B,nh]
     b_h = jnp.repeat(bmat.astype(jnp.float32), rep, axis=1)    # [B,nh,N]
     c_h = jnp.repeat(cmat.astype(jnp.float32), rep, axis=1)
     b_h = logical_constraint(b_h, None, "ssm_heads", None)

@@ -197,6 +197,38 @@ class DecoderLM:
             x = self._unembed(sp, x[:, -1:, :])[:, 0]
         return x, ks, vs
 
+    def stage_prefill_chunk(self, sp, x, kc, vc, pos, *, first: bool,
+                            last: bool, tokens=None):
+        """Chunked paged prefill for one stage: a chunk of C prompt tokens at
+        absolute positions pos..pos+C-1 attends causally over the cache
+        prefix [0,pos) (densified pool pages) plus itself, writing its K/V
+        into the cache window at `pos`.  Stage 0 passes `tokens` [B,C]; the
+        last stage returns the chunk's final-token logits (only the final
+        chunk's matter — they are the prefill logits).  kc/vc: [Lstage,B,S,H,D].
+        """
+        cfg = self.cfg
+        if first:
+            x = jnp.take(sp["embed"], tokens, axis=0)
+            if cfg.pos_emb == "learned":
+                x = x + jax.lax.dynamic_slice_in_dim(
+                    sp["pos_table"], pos, tokens.shape[1], axis=0)[None]
+        c = x.shape[1]
+        s_cache = kc.shape[2]
+        kv_positions = jnp.arange(s_cache, dtype=jnp.int32)
+        kv_positions = jnp.where(kv_positions < pos + c, kv_positions, -1)
+
+        def body(x, xs):
+            lp, k1, v1 = xs
+            x, (k1, v1), _ = self._layer(x, lp, mode="decode", kc=k1, vc=v1,
+                                         kv_positions=kv_positions, pos=pos)
+            return x, (k1, v1)
+
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        if last:
+            x = norm_apply(cfg.norm, x, sp["final_norm"])
+            x = self._unembed(sp, x[:, -1:, :])[:, 0]
+        return x, kc, vc
+
     def stage_decode(self, sp, x, kc, vc, pos, *, first: bool, last: bool,
                      token=None):
         """One decode step for one stage.  kc/vc: [Lstage,B,S,H,D]."""

@@ -65,6 +65,10 @@ class EngineReport:
     prefill_tokens_total: int = 0
     prefill_tokens_saved: int = 0           # prompt tokens served from cache
     tier_stats: Dict[str, float] = field(default_factory=dict)
+    # one entry per continuous-batching round that executed >=1 decode step:
+    # modeled prefill seconds co-scheduled in that round (the decode stall a
+    # long prompt inflicts; chunk-interleaving bounds it to one chunk pass)
+    prefill_stall_trace: List[float] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -79,6 +83,7 @@ class ServingEngine:
                  tiered: bool = False,
                  host_cache_blocks: Optional[int] = None,
                  ssd_cache_blocks: Optional[int] = None,
+                 prefill_chunk_tokens: Optional[int] = None,
                  hw: HardwareModel = DEFAULT_HW,
                  sampler: Callable = greedy):
         self.cfg = cfg
@@ -92,7 +97,8 @@ class ServingEngine:
                                      kv_pool_blocks=kv_pool_blocks,
                                      tiered=tiered,
                                      host_cache_blocks=host_cache_blocks,
-                                     ssd_cache_blocks=ssd_cache_blocks)
+                                     ssd_cache_blocks=ssd_cache_blocks,
+                                     prefill_chunk_tokens=prefill_chunk_tokens)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -165,6 +171,12 @@ class ServingEngine:
         per-request steps exactly like `run`'s global steps.  Each request
         generates exactly `max_new` tokens (or stops at eos) — unlike `run`,
         no request is held hostage by the longest peer in its microbatch.
+
+        Prompts longer than `prefill_chunk_tokens` prefill CHUNK-INTERLEAVED:
+        each round runs one chunk pass per in-flight prefill alongside one
+        decode step per running sequence, so a long prompt stalls co-resident
+        decodes by at most one chunk instead of its whole length
+        (`EngineReport.prefill_stall_trace` records the per-round stall).
         """
         cl = self.cluster
         assert cl.paged, "run_continuous requires ServingEngine(..., paged=True)"
@@ -176,6 +188,8 @@ class ServingEngine:
         report = EngineReport(tokens={r.rid: r.tokens for r in requests})
         self._gstep = 0
         while queue or active or preempted:
+            cl.round_prefill_model_s = 0.0
+            self._round_decodes = 0
             # --- resume preempted, then admit new, while blocks are free ---
             while preempted and len(active) < max_active and \
                     cl.can_resume(preempted[0].rid, len(active)):
@@ -210,9 +224,12 @@ class ServingEngine:
                     except PoolExhausted:
                         # only a sequence with device-resident blocks frees
                         # anything (under swapping they are all offloaded
-                        # between steps and preemption cannot help)
+                        # between steps and preemption cannot help); a
+                        # mid-prefill sequence is never a victim — its chunk
+                        # cursor assumes the partial table stays put
                         victim = next(
                             (v for v in reversed(active) if v is not r
+                             and next_step[v.rid] > 0
                              and cl.resident_blocks(v.rid) > 0), None)
                         if victim is None:
                             raise
@@ -226,6 +243,8 @@ class ServingEngine:
                     r.done = True
                     cl.free_seq(r.rid)
                     active.remove(r)
+            if self._round_decodes:
+                report.prefill_stall_trace.append(cl.round_prefill_model_s)
         report.peak_kv_bytes = cl.kv_bytes_peak
         report.prefill_tokens_total = cl.prefill_tokens_total
         report.prefill_tokens_saved = cl.prefill_tokens_saved
@@ -256,22 +275,37 @@ class ServingEngine:
             resume = cl.detect_and_recover(live)
             report.recoveries += 1
             self._apply_resume_seqs(resume, covered + [r], next_step, report)
+            # a worker death takes mid-prefill partial tables with it (their
+            # sequences have no replicated steps to restore from): restart
+            # those prefills from scratch on the recovered cluster
+            for rr in covered + [r]:
+                if next_step.get(rr.rid, 1) == 0:
+                    cl.abort_prefill(rr.rid)
             self._step_seq(r, next_step, report)
 
     def _step_seq(self, r: Request, next_step: Dict[int, int],
                   report: EngineReport) -> None:
+        """One pipeline pass for one request: a (chunk of) prefill while
+        next_step is 0 — next_step stays 0 until the final chunk returns the
+        prefill logits — else one decode step."""
         cl = self.cluster
         i = next_step[r.rid]
         if i == 0:
-            logits = cl.prefill_seq(r.rid, r.prompt, r.max_new)
+            if not cl.prefill_pending(r.rid):
+                cl.prefill_seq_begin(r.rid, r.prompt, r.max_new)
+            logits = cl.prefill_seq_step(r.rid)
+            report.steps_executed += 1
+            if logits is None:
+                return                   # prefill still in flight
             tok = self.sampler(logits, 0)
         else:
             last = np.asarray([r.tokens[i - 1]], np.int32)
             logits = cl.decode_seq(r.rid, jnp.asarray(last), i)
             tok = self.sampler(logits, i)
+            self._round_decodes += 1
+            report.steps_executed += 1
         self._emit(_SingleSeq(r), tok, i)
         next_step[r.rid] = i + 1
-        report.steps_executed += 1
 
     def _apply_resume_seqs(self, resume: Dict[int, int],
                            requests: List[Request],
