@@ -21,11 +21,10 @@ import math
 
 import numpy as np
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import plan
-
-from benchmarks.common import emit
 
 CHUNK = 16
 LONG_PLEN = 96

@@ -7,14 +7,13 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import MachineSpec, plan
 from repro.core.schedule import Job
 from repro.core.simulator import (lmsys_like_tokens, poisson_arrivals,
                                   simulate_baseline, simulate_dejavu)
-
-from benchmarks.common import emit
 
 
 def _sweep(cfg, d, rates, n_jobs=48, mean_tok=150):

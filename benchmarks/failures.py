@@ -14,13 +14,12 @@ import dataclasses
 import jax
 import numpy as np
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.simulator import failure_latency
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
-
-from benchmarks.common import emit
 
 
 def run() -> None:

@@ -11,12 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.kv_pack import kv_pack
-from repro.kernels import ref
-
 from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kv_pack import kv_pack
 
 
 def run() -> None:

@@ -9,14 +9,13 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import MachineSpec, plan
 from repro.core.schedule import Job
 from repro.core.simulator import (lmsys_like_tokens, simulate_baseline,
                                   simulate_dejavu, simulate_dp)
-
-from benchmarks.common import emit
 
 N_REQ = 256          # requests in the trace
 MEAN_TOK = 150

@@ -8,12 +8,11 @@ archs.
 """
 from __future__ import annotations
 
+from benchmarks.common import emit
 from repro.configs import ARCHS
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import MachineSpec
-
-from benchmarks.common import emit
 
 
 def run() -> None:

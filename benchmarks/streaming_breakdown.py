@@ -12,13 +12,12 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.dejavulib import HostMemoryStore, NetworkTransport, scatter
 from repro.core.dejavulib.transport import DEFAULT_HW
 from repro.core.planner import MachineSpec
-
-from benchmarks.common import emit
 
 
 def _modeled(cfg, prompt=500, new=500, mb=8):

@@ -7,13 +7,12 @@ sequences/batches flip the inequality — both regimes are reported.
 """
 from __future__ import annotations
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import MachineSpec
 from repro.core.schedule import Job
 from repro.core.simulator import lmsys_like_tokens, simulate_baseline
-
-from benchmarks.common import emit
 
 
 def _largest_feasible_mb(cfg, d, mach, prompt, new):

@@ -26,12 +26,11 @@ import dataclasses
 
 import numpy as np
 
+from benchmarks.common import emit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.dejavulib.transport import DEFAULT_HW
 from repro.core.planner import MachineSpec, TierSpec, min_token_depth, plan
-
-from benchmarks.common import emit
 
 N_REQUESTS = 8
 SYS_PROMPT_LEN = 24        # shared system prefix (3 full 8-token blocks)

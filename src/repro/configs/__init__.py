@@ -1,4 +1,4 @@
-from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, supports_shape
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, supports_shape
 from repro.configs.registry import ARCHS, PAPER_ARCHS, get_arch, list_archs
 
 __all__ = [

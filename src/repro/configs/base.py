@@ -60,6 +60,12 @@ class ArchConfig:
     # how long a long prompt stalls in-flight decodes.  0 disables chunking
     # (cold prompts prefill in one pass, adopted suffixes run token-at-a-time).
     prefill_chunk_tokens: int = 64
+    # Fused batched rounds (continuous batching): ONE pipeline pass decodes
+    # every live sequence per round (ragged per-sequence lengths over
+    # per-sequence block tables) and one pass packs all in-flight prefill
+    # chunks, instead of one pass per sequence per round.  Off = the
+    # per-sequence oracle path, which fused mode is property-tested against.
+    fused_rounds: bool = False
     # --- misc ---
     dtype: str = "bfloat16"
     max_seq_len: int = 524288

@@ -2,20 +2,19 @@
 from __future__ import annotations
 
 from repro.configs.base import ArchConfig
-
-from repro.configs.yi_34b import CONFIG as _yi_34b
-from repro.configs.nemotron_4_340b import CONFIG as _nemotron
-from repro.configs.smollm_360m import CONFIG as _smollm
-from repro.configs.internlm2_1_8b import CONFIG as _internlm2
-from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
-from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
-from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
-from repro.configs.hymba_1_5b import CONFIG as _hymba
-from repro.configs.phi_3_vision_4_2b import CONFIG as _phi3v
-from repro.configs.mamba2_780m import CONFIG as _mamba2
-from repro.configs.opt_66b import CONFIG as _opt66b
 from repro.configs.bloom_176b import CONFIG as _bloom
 from repro.configs.gpt2_1_5b import CONFIG as _gpt2
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.nemotron_4_340b import CONFIG as _nemotron
+from repro.configs.opt_66b import CONFIG as _opt66b
+from repro.configs.phi_3_vision_4_2b import CONFIG as _phi3v
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.smollm_360m import CONFIG as _smollm
+from repro.configs.yi_34b import CONFIG as _yi_34b
 
 # The 10 assigned architectures (dry-run + roofline matrix).
 ARCHS: dict[str, ArchConfig] = {

@@ -18,10 +18,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
 from repro.core.controller import Controller
-from repro.core.dejavulib import (PipelineTopo, StreamEngine, NetworkTransport,
-                                  stream_in, stream_out, stream_in_blocks,
+from repro.core.dejavulib import (NetworkTransport, PipelineTopo, StreamEngine,
+                                  stream_in, stream_in_blocks, stream_out,
                                   stream_out_blocks)
-from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 from repro.core.worker import StageWorker
 from repro.kvcache.paged import BlockPool, PoolExhausted, blocks_for
 from repro.kvcache.tiers import TierConfig
@@ -44,7 +44,8 @@ class DejaVuCluster:
                  tiered: bool = False,
                  host_cache_blocks: Optional[int] = None,
                  ssd_cache_blocks: Optional[int] = None,
-                 prefill_chunk_tokens: Optional[int] = None):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 fused_rounds: Optional[bool] = None):
         assert mode in ("colocated", "disaggregated")
         if mode == "disaggregated":
             assert dp_split is not None and sum(dp_split) == n_workers
@@ -68,6 +69,8 @@ class DejaVuCluster:
         self.prefill_chunk_tokens = (cfg.prefill_chunk_tokens
                                      if prefill_chunk_tokens is None
                                      else prefill_chunk_tokens)
+        self.fused_rounds = (cfg.fused_rounds if fused_rounds is None
+                             else fused_rounds)
         self.streamer = StreamEngine("cluster")
         self.controller = Controller()
         self.net = NetworkTransport(hw)
@@ -213,6 +216,17 @@ class DejaVuCluster:
     # ------------------------------------------------------------------
     # paged serving primitives (continuous batching; KV moves per BLOCK)
     # ------------------------------------------------------------------
+    @property
+    def fused_ok(self) -> bool:
+        """Fused batched rounds are exact only where the chunked-decode path
+        is (full-causal dense/moe, no patch/meta context slots), and the
+        batched mask path carries no ALiBi bias — everything else falls back
+        to the per-sequence oracle path even with the knob on."""
+        return (self.fused_rounds and self.paged
+                and self.cfg.family in ("dense", "moe")
+                and not self.cfg.context_overhead
+                and self.cfg.pos_emb != "alibi")
+
     def can_admit(self, prompt_len: int, n_active: int,
                   token_ids: Optional[np.ndarray] = None) -> bool:
         """Admission control: every token-side pool must fit the prompt plus
@@ -220,21 +234,33 @@ class DejaVuCluster:
         block before this request finishes its first step).
 
         With tiering, `token_ids` lets admission count cached capacity: full
-        prompt blocks whose prefix hash is live in the pool will be
-        ref-shared, not allocated, so they need no free blocks.  (Tier-backed
-        blocks still promote INTO free blocks and are not discounted.)"""
-        need = blocks_for(prompt_len + 1, self.kv_block_size) + n_active
-        if token_ids is not None and self.tiered and self.mode == "colocated":
-            # discount exactly what adoption will ref-share: the chain is
-            # capped one block short of the prompt (at least one suffix token
-            # must run through compute), so a boundary-aligned prompt's last
-            # full block is NOT shared and must not be discounted
+        prompt blocks whose prefix hash is live in a pool will be ref-shared,
+        not allocated, so they need no free blocks — in BOTH serving modes
+        (the prompt side adopts prefixes during prefill; the token side
+        re-shares them when the streamed blocks install).  The chain is
+        capped one block short of the prompt — at least one suffix token must
+        run through compute — so a boundary-aligned prompt's last full block
+        is never discounted.  Tier-backed blocks still promote INTO free
+        blocks and are not discounted.  In disaggregated mode the prompt-side
+        pools are checked too (they hold the prompt only until its blocks
+        stream out, so no per-active headroom there)."""
+        bs = self.kv_block_size
+        need = blocks_for(prompt_len + 1, bs) + n_active
+        hashes: List[int] = []
+        if token_ids is not None and self.tiered:
             hashes = BlockPool.chain_hashes(
-                [int(t) for t in token_ids],
-                self.kv_block_size)[:(prompt_len - 1) // self.kv_block_size]
-            return all(w.pool.num_free() >= need - w.pool_prefix_hits(hashes)
-                       for w in self.token_group)
-        return all(w.pool.num_free() >= need for w in self.token_group)
+                [int(t) for t in token_ids], bs)[:(prompt_len - 1) // bs]
+
+        def fits(w: StageWorker, want: int) -> bool:
+            hits = w.pool_prefix_hits(hashes) if hashes else 0
+            return w.pool.num_free() >= want - hits
+
+        if not all(fits(w, need) for w in self.token_group):
+            return False
+        if self.mode == "disaggregated":
+            pneed = blocks_for(prompt_len, bs)
+            return all(fits(w, pneed) for w in self.prompt_group)
+        return True
 
     def prefill_seq(self, rid: int, prompt: np.ndarray, max_new: int) -> jnp.ndarray:
         """Prefill ONE request through the prompt pipeline into pool blocks,
@@ -293,7 +319,9 @@ class DejaVuCluster:
                     w.ensure_prefill_table(rid, plen)
             else:
                 st["mode"] = "token"
-        elif self._chunkable() and plen > ck:
+        elif self._chunkable() and (plen > ck or self.fused_ok):
+            # fused rounds force chunk mode even for short cold prompts so
+            # every in-flight prefill can pack into the round's chunk-set pass
             st["mode"] = "chunk"
             for w in self.prompt_group:
                 w.ensure_prefill_table(rid, plen, token_ids=token_ids)
@@ -315,32 +343,37 @@ class DejaVuCluster:
             for w in self.prompt_group:
                 x, _ = w.prefill_paged(rid, x,
                                        token_ids=[int(t) for t in st["prompt"]])
-            st["pos"], n_q = plen, plen
+            n_q = plen
         elif st["mode"] == "chunk":
             c = min(self.prefill_chunk_tokens, plen - pos)
             x = jnp.asarray(st["prompt"][pos:pos + c])[None]
             for w in self.prompt_group:
                 x = w.prefill_chunk_paged(rid, x, pos)
-            st["pos"], n_q = pos + c, c
-            if st["start"] == 0:
-                # cold chunked prefill: publish hashes of the blocks whose
-                # pages this pass completed (adopted suffix blocks were never
-                # published on the batched path either)
-                for w in self.prompt_group:
-                    w.publish_prefix_hashes(rid, self.seq_hashes[rid],
-                                            st["pos"])
+            n_q = c
         else:                            # token-at-a-time oracle path
             x = jnp.asarray(st["prompt"][pos:pos + 1])
             for w in self.prompt_group:
                 x = w.decode_paged(rid, x, pos)
-            st["pos"], n_q = pos + 1, 1
+            n_q = 1
         st["x"] = x
-        st["passes"] += 1
-        self.round_prefill_model_s += cm.chunked_prefill_pass_time(
-            self.cfg, n_q, st["pos"], self.cfg.num_layers, 8, self.hw)
+        self._after_prefill_pass(rid, st, n_q)
         if st["pos"] < plen:
             return None
         return self._finish_prefill(rid)
+
+    def _after_prefill_pass(self, rid: int, st: dict, n_q: int) -> None:
+        """Per-pass bookkeeping shared by the per-sequence and fused chunk
+        paths: advance the cursor, publish the prefix hashes of the blocks
+        whose pages the cursor just completed (cold chunked prefills only —
+        adopted suffixes and the batched path publish elsewhere, see
+        `publish_prefix_hashes`), and charge the modeled pass time."""
+        st["pos"] += n_q
+        st["passes"] += 1
+        if st["mode"] == "chunk" and st["start"] == 0:
+            for w in self.prompt_group:
+                w.publish_prefix_hashes(rid, self.seq_hashes[rid], st["pos"])
+        self.round_prefill_model_s += cm.chunked_prefill_pass_time(
+            self.cfg, n_q, st["pos"], self.cfg.num_layers, 8, self.hw)
 
     def _finish_prefill(self, rid: int) -> jnp.ndarray:
         st = self._pending_prefill.pop(rid)
@@ -361,6 +394,12 @@ class DejaVuCluster:
 
     def prefill_pending(self, rid: int) -> bool:
         return rid in self._pending_prefill
+
+    def prefill_mode(self, rid: int) -> Optional[str]:
+        """'chunk' | 'batch' | 'token' for a staged prefill, else None —
+        the engine packs only chunk-mode prefills into a fused pass."""
+        st = self._pending_prefill.get(rid)
+        return None if st is None else st["mode"]
 
     def abort_prefill(self, rid: int) -> None:
         """Drop an in-flight prefill (e.g. a worker died mid-chunk and took
@@ -406,7 +445,11 @@ class DejaVuCluster:
         for di, w in enumerate(self.token_group):
             blocks = stream_in_blocks(w.cache.host, di, topo_t, topo_p,
                                       self.net, seq=rid)
-            w.install_blocks(rid, plen, blocks)
+            # re-share full prompt blocks already live in the token-side pool
+            # (same cap as `can_admit`'s discount, which counts on this)
+            w.install_blocks(rid, plen, blocks,
+                             hashes=self.seq_hashes.get(rid, [])[
+                                 :(plen - 1) // self.kv_block_size])
 
     def decode_seq(self, rid: int, token: jnp.ndarray, step: int) -> jnp.ndarray:
         """One decode step for one sequence through the token pipeline.
@@ -433,6 +476,84 @@ class DejaVuCluster:
             w.heartbeat()
         self._track_kv_peak()
         return x
+
+    def decode_batch(self, rids: List[int], tokens,
+                     steps: List[int]) -> jnp.ndarray:
+        """ONE pipeline pass that decodes EVERY sequence in `rids` one step
+        (fused rounds) — ragged per-sequence lengths over per-sequence block
+        tables, vs `decode_seq`'s one pass per sequence.
+
+        Per-sequence semantics are preserved exactly: capacity is pre-flighted
+        across the WHOLE batch so PoolExhausted raises before any pool
+        mutates (the engine preempts a victim and retries); replication still
+        pushes each sequence's touched block with its own step; swap restores
+        / offloads every sequence around the pass; and a worker death
+        mid-pass surfaces as RuntimeError for the engine's detect-and-recover,
+        which rolls every sequence back exactly like the per-sequence path.
+
+        tokens: [B] int32 (each sequence's last sampled token); steps:
+        per-sequence 1-based decode step.  Returns logits [B,V]."""
+        poses = [self.seq_len[rid] for rid in rids]
+        if self.swapping:
+            for w in self.token_group:
+                for rid in rids:
+                    w.paged_restore(rid)
+        for w in self.token_group:
+            need = sum(1 for rid in rids if w.pool.append_needs_block(rid))
+            if need > w.pool.num_free():
+                raise PoolExhausted(
+                    f"worker {w.wid} pool cannot absorb a fused round of "
+                    f"{len(rids)} appends ({need} needed, "
+                    f"{w.pool.num_free()} free)")
+        x = jnp.asarray(np.asarray(tokens, np.int32))
+        for w in self.token_group:
+            x = w.decode_paged_batch(rids, x, poses)
+        for rid, pos in zip(rids, poses):
+            self.seq_len[rid] = pos + 1
+            self._register_compute(1, pos + 1)
+        if self.replication:
+            for rid, step, pos in zip(rids, steps, poses):
+                self._replicate_paged(rid, step=step, pos=pos)
+        if self.swapping:
+            for w in self.token_group:
+                for rid in rids:
+                    w.paged_offload(rid)
+        for w in set(self.prompt_group + self.token_group):
+            w.heartbeat()
+        self._track_kv_peak()
+        return x
+
+    def prefill_chunkset_pass(self, rids: List[int]
+                              ) -> Dict[int, Optional[jnp.ndarray]]:
+        """Advance the staged chunk-mode prefills of ALL `rids` by one chunk
+        each in ONE pipeline pass through the prompt group — the fused
+        analogue of calling `prefill_seq_step` once per sequence.  Ragged
+        chunk lengths (a prompt's final chunk may be short) are padded to the
+        set's longest and masked inside the pass.  Returns {rid:
+        prefill_logits | None}; a completed prompt runs the same post-prefill
+        streaming / replication / swap as the per-sequence path."""
+        sts = [self._pending_prefill[r] for r in rids]
+        assert all(st["mode"] == "chunk" for st in sts), \
+            "prefill_chunkset_pass packs chunk-mode prefills only"
+        ck = self.prefill_chunk_tokens
+        cs = [min(ck, st["plen"] - st["pos"]) for st in sts]
+        cmax = max(cs)
+        toks = np.zeros((len(rids), cmax), np.int32)
+        for i, st in enumerate(sts):
+            toks[i, :cs[i]] = st["prompt"][st["pos"]:st["pos"] + cs[i]]
+        pos0s = [st["pos"] for st in sts]
+        x = jnp.asarray(toks)
+        for w in self.prompt_group:
+            x = w.prefill_chunk_paged_batch(rids, x, pos0s, cs)
+        out: Dict[int, Optional[jnp.ndarray]] = {}
+        for i, (rid, st) in enumerate(zip(rids, sts)):
+            self._after_prefill_pass(rid, st, cs[i])
+            if st["pos"] < st["plen"]:
+                out[rid] = None
+            else:
+                st["x"] = x[i:i + 1]
+                out[rid] = self._finish_prefill(rid)
+        return out
 
     def _replicate_paged(self, rid: int, step: int,
                          pos: Optional[int] = None) -> None:

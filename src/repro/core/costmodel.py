@@ -10,7 +10,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import ArchConfig
-from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 
 DTYPE_BYTES = 2  # bf16
 
@@ -149,6 +149,34 @@ def prefill_bubble_frac(cfg: ArchConfig, wl: WorkloadSpec, chunk: int,
     stall = prefill_stall_time(cfg, wl, chunk, n_layers, chips, hw, mfu)
     t = stage_token_time(cfg, wl, n_layers, chips, ctx, hw, beff)
     return stall / max(stall + t, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# fused batched rounds (continuous batching: ONE pipeline pass per round)
+# ---------------------------------------------------------------------------
+
+def decode_round_time(cfg: ArchConfig, n_active: int, ctx: int,
+                      n_layers: int, chips: int,
+                      hw: HardwareModel = DEFAULT_HW, beff: float = 0.7,
+                      *, fused: bool = True) -> float:
+    """Modeled wall time of ONE continuous-batching decode round with
+    `n_active` live sequences at mean context `ctx`.
+
+    Fused: one bandwidth-bound pass reads the stage weights ONCE plus every
+    sequence's KV, plus a single dispatch latency — round time is O(1) in
+    pass count and grows only with the aggregate KV bytes.  Per-sequence
+    (the oracle path): one pass per live sequence, each pass re-reading the
+    full stage weights and paying its own dispatch latency — exactly the
+    O(n_active) round the fused refactor removes.  Both sides are built from
+    the SAME `stage_token_time` term, so their ratio isolates the
+    weight-re-read + dispatch overhead."""
+    wl1 = WorkloadSpec(prompt_len=ctx, new_tokens=1, microbatch=1)
+    one = stage_token_time(cfg, wl1, n_layers, chips, ctx, hw, beff)
+    if not fused:
+        return n_active * (one + hw.net_latency)
+    wlb = WorkloadSpec(prompt_len=ctx, new_tokens=1, microbatch=n_active)
+    return (stage_token_time(cfg, wlb, n_layers, chips, ctx, hw, beff)
+            + hw.net_latency)
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,14 @@
 from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore, TransferRecord
-from repro.core.dejavulib.transport import (HardwareModel, Transport,
-                                            LocalTransport, HostLinkTransport,
-                                            NetworkTransport, ICITransport,
-                                            SSDTransport)
-from repro.core.dejavulib.primitives import (CacheChunk, flush, fetch, scatter,
-                                             gather, stream_out, stream_in,
-                                             stream_out_blocks,
-                                             stream_in_blocks,
-                                             plan_repartition, PipelineTopo)
+from repro.core.dejavulib.primitives import (CacheChunk, PipelineTopo, fetch,
+                                             flush, gather, plan_repartition,
+                                             scatter, stream_in,
+                                             stream_in_blocks, stream_out,
+                                             stream_out_blocks)
 from repro.core.dejavulib.streamer import StreamEngine
+from repro.core.dejavulib.transport import (HardwareModel, HostLinkTransport,
+                                            ICITransport, LocalTransport,
+                                            NetworkTransport, SSDTransport,
+                                            Transport)
 
 __all__ = [
     "HostMemoryStore", "SSDStore", "TransferRecord", "HardwareModel",

@@ -24,7 +24,7 @@ from typing import Optional
 
 from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
-from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 
 
 @dataclass(frozen=True)
@@ -63,11 +63,21 @@ class Plan:
     # prompt without) and the bubble fraction of a decode round it implies
     decode_stall_s: float = 0.0
     bubble_frac: float = 0.0
+    # continuous-batching round time at `microbatch` live sequences: one pass
+    # per sequence (oracle path) vs ONE fused batched pass per round — both
+    # derived from the same stage_token_time term (cm.decode_round_time)
+    round_time_perseq_s: float = 0.0
+    round_time_fused_s: float = 0.0
     note: str = ""
 
     @property
     def speedup(self) -> float:
         return self.inv_tp_colocated / self.inv_tp_disagg if self.inv_tp_disagg else 0.0
+
+    @property
+    def fused_round_speedup(self) -> float:
+        return (self.round_time_perseq_s / self.round_time_fused_s
+                if self.round_time_fused_s else 0.0)
 
 
 def paged_token_kv_bytes(cfg: ArchConfig, wl: cm.WorkloadSpec,
@@ -173,6 +183,10 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
                                   d * mach.chips, hw, mfu)
     bubble = cm.prefill_bubble_frac(cfg, wl, prefill_chunk_tokens, l,
                                     d * mach.chips, ctx, hw, mfu, beff)
+    rt_seq = cm.decode_round_time(cfg, wl.microbatch, ctx, l, d * mach.chips,
+                                  hw, beff, fused=False)
+    rt_fused = cm.decode_round_time(cfg, wl.microbatch, ctx, l,
+                                    d * mach.chips, hw, beff, fused=True)
 
     dp_min = min_prompt_depth(cfg, wl, mach)
     dt_min = min_token_depth(cfg, wl, mach, paged=paged, kv_util=kv_util,
@@ -180,6 +194,7 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
     if dt_min < 0 or dp_min + max(dt_min, 1) > d:
         return Plan(d, 0, 0, False, False, 1.0, ic, float("inf"), 0, 0,
                     decode_stall_s=stall, bubble_frac=bubble,
+                    round_time_perseq_s=rt_seq, round_time_fused_s=rt_fused,
                     note="memory-infeasible for this D")
 
     # continuous optimum (Eq. 5) then integer search subject to Eqs. 1–2;
@@ -201,7 +216,8 @@ def plan(cfg: ArchConfig, wl: cm.WorkloadSpec, d: int,
         i_dis = max(i_p, i_t)
         cand = Plan(d, dp, dt, True, i_dis < ic, m, ic, i_dis,
                     y_dis / dp, t_dis / dt,
-                    decode_stall_s=stall, bubble_frac=bubble)
+                    decode_stall_s=stall, bubble_frac=bubble,
+                    round_time_perseq_s=rt_seq, round_time_fused_s=rt_fused)
         if best is None or cand.inv_tp_disagg < best.inv_tp_disagg:
             best = cand
     assert best is not None

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
-from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 from repro.core.planner import MachineSpec, Plan, plan
 from repro.core.schedule import EventEngine, Job, build_pipeline_items, rr_schedule
 

@@ -12,6 +12,7 @@ primitives only — no ad-hoc copies).
 from __future__ import annotations
 
 import functools
+import math
 import time
 from typing import Dict, Optional, Tuple
 
@@ -19,10 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dejavulib import (HostMemoryStore, LocalTransport,
-                                  HostLinkTransport, NetworkTransport,
+from repro.core.dejavulib import (HostLinkTransport, HostMemoryStore,
+                                  LocalTransport, NetworkTransport,
                                   StreamEngine)
-from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 from repro.kvcache.paged import (BlockPool, PagedKVCache, PoolExhausted,
                                  blocks_for)
 from repro.kvcache.tiers import KVTierManager, TierConfig
@@ -234,6 +235,13 @@ class StageWorker:
             self._prefill_chunk = jax.jit(
                 lambda sp, tokens, kc, vc, pos: mf.stage_prefill_chunk(
                     sp, None, kc, vc, pos, first=True, last=last, tokens=tokens))
+            self._decode_batch = jax.jit(
+                lambda sp, token, kc, vc, pos: mf.stage_decode_batch(
+                    sp, None, kc, vc, pos, first=True, last=last, token=token))
+            self._prefill_chunk_batch = jax.jit(
+                lambda sp, tokens, kc, vc, pos, ql: mf.stage_prefill_chunk_batch(
+                    sp, None, kc, vc, pos, ql, first=True, last=last,
+                    tokens=tokens))
         else:
             self._prefill = jax.jit(lambda sp, x: mf.stage_prefill(
                 sp, x, first=False, last=last))
@@ -242,6 +250,12 @@ class StageWorker:
             self._prefill_chunk = jax.jit(
                 lambda sp, x, kc, vc, pos: mf.stage_prefill_chunk(
                     sp, x, kc, vc, pos, first=False, last=last))
+            self._decode_batch = jax.jit(
+                lambda sp, x, kc, vc, pos: mf.stage_decode_batch(
+                    sp, x, kc, vc, pos, first=False, last=last))
+            self._prefill_chunk_batch = jax.jit(
+                lambda sp, x, kc, vc, pos, ql: mf.stage_prefill_chunk_batch(
+                    sp, x, kc, vc, pos, ql, first=False, last=last))
 
     # ------------------------------------------------------------------
     def heartbeat(self) -> bool:
@@ -379,24 +393,38 @@ class StageWorker:
         (DMA-aligned; the re-written head tokens of the aligned window hold
         identical values).  Requires `ensure_prefill_table` first."""
         self._check()
-        from repro.kernels import ops as kops
         c = int(x_or_tokens.shape[1])
-        bs = self.pool.block_size
-        pad_to = len(self.pool.tables[seq]) * bs
+        pad_to = len(self.pool.tables[seq]) * self.pool.block_size
         dense = self.pages.gather_dense(seq, pad_to)
         x, kc, vc = self._prefill_chunk(self.sp, x_or_tokens,
                                         jnp.asarray(dense["k"]),
                                         jnp.asarray(dense["v"]),
                                         jnp.int32(pos0))
+        self._write_chunk_window(seq, kc, vc, pos0, c, pad_to)
+        return x
+
+    def _write_chunk_window(self, seq: int, kc, vc, pos0: int, c: int,
+                            pad_to: int) -> None:
+        """Scatter one chunk's K/V window [pos0, pos0+c) back into `seq`'s
+        pages through a DMA-aligned kv_pack (kc/vc: [Lstage, 1, S, H, D]; the
+        re-written head tokens of the aligned window hold identical values).
+        Shared by the per-sequence and fused chunk paths so alignment and
+        dirty-block accounting can never drift between them."""
+        from repro.kernels import ops as kops
+        bs = self.pool.block_size
         tb = self.cache.token_block
         t0a = (pos0 // tb) * tb
         w = min(-(-(pos0 + c - t0a) // tb) * tb, pad_to - t0a)
-        win = {"k": np.asarray(kops.kv_pack_auto(kc, t0a, w, token_block=tb))[:, 0],
-               "v": np.asarray(kops.kv_pack_auto(vc, t0a, w, token_block=tb))[:, 0]}
+        # a pool whose block size does not divide the DMA token block can
+        # clip the window off-alignment: shrink the copy granularity so the
+        # pack still covers it exactly (t0a stays tb-aligned, so any divisor
+        # of tb is a valid granularity)
+        tbw = tb if w % tb == 0 else math.gcd(w, tb)
+        win = {"k": np.asarray(kops.kv_pack_auto(kc, t0a, w, token_block=tbw))[:, 0],
+               "v": np.asarray(kops.kv_pack_auto(vc, t0a, w, token_block=tbw))[:, 0]}
         self.pages.write_window(seq, win, t0a)
         self.paged_dirty.setdefault(seq, set()).update(
             range(t0a // bs, -(-(pos0 + c) // bs)))
-        return x
 
     def decode_paged(self, seq: int, x_or_token, pos: int):
         """One decode step for one sequence: append a slot (CoW if the tail
@@ -413,6 +441,75 @@ class StageWorker:
                "v": np.asarray(vc[:, 0, pos:pos + 1])}
         self.pages.write_window(seq, win, pos)
         self.paged_dirty.setdefault(seq, set()).add(pos // self.pool.block_size)
+        return x
+
+    def _gather_batch(self, seqs) -> Tuple[jax.Array, jax.Array, int]:
+        """Densify every sequence's pages to a common pad (ragged lengths
+        over per-sequence block tables) -> (kc, vc, pad_to) with kc/vc
+        [Lstage, B, pad_to, H, D] — the fused-round stage-cache layout."""
+        pad_to = max(len(self.pool.tables[s]) for s in seqs) * self.pool.block_size
+        dense = [self.pages.gather_dense(s, pad_to) for s in seqs]
+        kc = jnp.asarray(np.concatenate([d["k"] for d in dense], axis=1))
+        vc = jnp.asarray(np.concatenate([d["v"] for d in dense], axis=1))
+        return kc, vc, pad_to
+
+    def decode_paged_batch(self, seqs, x_or_tokens, poses):
+        """ONE fused pipeline pass: every sequence in `seqs` decodes one step
+        at its OWN position.  Appends a slot per sequence (CoW where shared),
+        gathers the ragged block tables into a common-padded batch cache,
+        runs the batched stage fn, and scatters each sequence's new-token K/V
+        window back through one multi-sequence ragged buffered copy.  The
+        cluster pre-flights pool capacity for the WHOLE batch first, so the
+        per-sequence appends here cannot run out mid-batch."""
+        self._check()
+        from repro.kernels import ops as kops
+        bs = self.pool.block_size
+        for seq in seqs:
+            cow = self.pool.append(seq)
+            self.pages.apply_cow(cow)
+        kc, vc, pad_to = self._gather_batch(seqs)
+        pos = jnp.asarray(np.asarray(poses, np.int32))
+        x, kc, vc = self._decode_batch(self.sp, x_or_tokens, kc, vc, pos)
+        tb = self.cache.token_block
+        t0s = [(p // tb) * tb for p in poses]
+        if pad_to % tb == 0:
+            # one ragged pack gathers every sequence's aligned one-token
+            # window (vs B separate kv_pack launches); the aligned head
+            # tokens re-write identical values, like the per-seq chunk path
+            starts = np.asarray(t0s, np.int32)
+            wk = np.asarray(kops.kv_pack_ragged_auto(kc, starts, tb,
+                                                     token_block=tb))
+            wv = np.asarray(kops.kv_pack_ragged_auto(vc, starts, tb,
+                                                     token_block=tb))
+            wins = [({"k": wk[:, i], "v": wv[:, i]}, t0s[i])
+                    for i in range(len(seqs))]
+        else:                            # unaligned pool blocks: plain slices
+            kc_np, vc_np = np.asarray(kc), np.asarray(vc)
+            wins = [({"k": kc_np[:, i, p:p + 1], "v": vc_np[:, i, p:p + 1]}, p)
+                    for i, p in enumerate(poses)]
+        for i, seq in enumerate(seqs):
+            win, t0 = wins[i]
+            self.pages.write_window(seq, win, t0)
+            self.paged_dirty.setdefault(seq, set()).add(poses[i] // bs)
+        return x
+
+    def prefill_chunk_paged_batch(self, seqs, x_or_tokens, pos0s, q_lens):
+        """One fused chunk-set pass: one prefill chunk of EACH sequence runs
+        in a single pipeline pass (`stage_prefill_chunk_batch`), sequence i's
+        chunk holding ``q_lens[i]`` valid tokens at positions ``pos0s[i]..``
+        and attending over its own resident prefix plus itself.  Each
+        sequence's K/V window scatters back into its own pages.  Requires
+        `ensure_prefill_table` for every sequence first."""
+        self._check()
+        kc, vc, pad_to = self._gather_batch(seqs)
+        pos = jnp.asarray(np.asarray(pos0s, np.int32))
+        ql = jnp.asarray(np.asarray(q_lens, np.int32))
+        x, kc, vc = self._prefill_chunk_batch(self.sp, x_or_tokens, kc, vc,
+                                              pos, ql)
+        kc_np, vc_np = np.asarray(kc), np.asarray(vc)
+        for i, seq in enumerate(seqs):
+            self._write_chunk_window(seq, kc_np[:, i:i + 1], vc_np[:, i:i + 1],
+                                     pos0s[i], q_lens[i], pad_to)
         return x
 
     def touched_block(self, seq: int, pos: int):

@@ -1,6 +1,6 @@
-from repro.distributed.sharding import (param_shardings, batch_shardings,
-                                        state_shardings, fsdp_enabled,
-                                        activation_rules)
+from repro.distributed.sharding import (activation_rules, batch_shardings,
+                                        fsdp_enabled, param_shardings,
+                                        state_shardings)
 
 __all__ = ["param_shardings", "batch_shardings", "state_shardings",
            "fsdp_enabled", "activation_rules"]

@@ -128,6 +128,88 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     return out.reshape(b, hq, d)
 
 
+def _batched_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                           m_ref, l_ref, acc_ref, *, scale, block_k):
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)            # [G, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bk, D]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                # [G, bk]
+    # ragged batch: slot j of tile ik is absolute position ik*bk + j, valid
+    # iff it is below THIS sequence's live length (vs the shared [S] mask of
+    # `decode_attention`)
+    g = s.shape[0]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (g, block_k), 1)
+    valid = ik * block_k + slot < len_ref[bi]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0, 0, :, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def batched_decode_attention(q, k, v, lengths, *, block_k: int = 512,
+                             interpret: bool = True):
+    """Fused-round decode attention: every sequence of the batch advances one
+    step in ONE kernel launch, each masked to its OWN live length.
+
+    q: [B,Hq,D]; k/v: [B,S,Hkv,D] (per-sequence caches padded to a common S —
+    the densified block-table gather of the fused live path); lengths: [B]
+    int32 live token counts INCLUDING the new token -> [B,Hq,D].
+
+    This is `decode_attention` with the validity mask made per-sequence
+    (ragged lengths) instead of one shared [S] vector, so one launch serves
+    the whole fused round.  Lengths ride scalar prefetch like the paged
+    kernel's block tables.
+    """
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    bk = min(block_k, s)
+    pk = (-s) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qg = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, (s + pk) // bk)
+
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda bi, h, ik, ln: (bi, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, bk, 1, d), lambda bi, h, ik, ln: (bi, ik, h, 0))
+    out = pl.pallas_call(
+        functools.partial(_batched_decode_kernel, scale=d ** -0.5, block_k=bk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec],
+            out_specs=pl.BlockSpec((1, 1, g, d),
+                                   lambda bi, h, ik, ln: (bi, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g,), jnp.float32),
+                pltpu.VMEM((g, d), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), qg, k, v)
+    return out.reshape(b, hq, d)
+
+
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention(q, k, v, kv_valid, *, block_k: int = 512, interpret: bool = True):
     """q: [B,Hq,D]; k/v: [B,S,Hkv,D]; kv_valid: [S] bool -> [B,Hq,D]."""

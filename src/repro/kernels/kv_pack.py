@@ -52,6 +52,36 @@ def kv_pack(cache, t0, *, width: int, token_block: int = 8, interpret: bool = Tr
     )(jnp.asarray(t0, jnp.int32).reshape(1), cache)
 
 
+@functools.partial(jax.jit, static_argnames=("width", "token_block", "interpret"))
+def kv_pack_ragged(cache, starts, *, width: int, token_block: int = 8,
+                   interpret: bool = True):
+    """Fused-round buffered copy: pack ONE window per batch row, each at its
+    own token offset — batch row b yields cache[:, b, starts[b]:starts[b]+width].
+
+    cache: [L,B,S,H,D]; starts: [B] int32, each a multiple of token_block
+    (the cache manager's DMA alignment, like `kv_pack`'s scalar t0).
+    Returns [L,B,width,H,D].  One launch replaces the B separate `kv_pack`
+    calls a per-sequence writeback would issue — the multi-sequence analogue
+    of aggregating L×B small copies into one pass.
+    """
+    l, b, s, h, d = cache.shape
+    bt = min(token_block, width)
+    assert width % bt == 0, (width, bt)
+    grid = (l, b, width // bt)
+    spec_in = pl.BlockSpec(
+        (1, 1, bt, h, d), lambda li, bi, i, st: (li, bi, st[bi] // bt + i, 0, 0))
+    spec_out = pl.BlockSpec((1, 1, bt, h, d),
+                            lambda li, bi, i, st: (li, bi, i, 0, 0))
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=[spec_in],
+            out_specs=spec_out),
+        out_shape=jax.ShapeDtypeStruct((l, b, width, h, d), cache.dtype),
+        interpret=interpret,
+    )(jnp.asarray(starts, jnp.int32).reshape(-1), cache)
+
+
 def _scatter_kernel(t0_ref, buf_ref, cache_ref, out_ref):
     del t0_ref, cache_ref
     out_ref[...] = buf_ref[...]

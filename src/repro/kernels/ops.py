@@ -12,9 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.decode_attention import (batched_decode_attention,
+                                            decode_attention,
+                                            paged_decode_attention)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import decode_attention, paged_decode_attention
-from repro.kernels.kv_pack import kv_pack, kv_unpack
+from repro.kernels.kv_pack import kv_pack, kv_pack_ragged, kv_unpack
 from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -45,6 +47,13 @@ def decode_attention_auto(q, k_cache, v_cache, mask):
     return out[:, None]
 
 
+def batched_decode_attention_auto(q, k_cache, v_cache, lengths):
+    """Fused-round decode attention entry point: one launch, B sequences,
+    ragged per-sequence lengths.  q: [B,Hq,D]; k/v: [B,S,Hkv,D]."""
+    return batched_decode_attention(q, k_cache, v_cache, lengths,
+                                    interpret=INTERPRET)
+
+
 def paged_decode_attention_auto(q, k_pages, v_pages, block_tables, lengths):
     """Paged decode attention entry point.  q: [B,1,Hq,D] or [B,Hq,D]."""
     squeeze = q.ndim == 4
@@ -71,6 +80,13 @@ def ssd_auto(x, dt, a_neg, bmat, cmat, chunk=128, h0=None):
 def kv_pack_auto(cache, t0, width, token_block: int = 8):
     return kv_pack(cache, t0, width=width, token_block=token_block,
                    interpret=INTERPRET)
+
+
+def kv_pack_ragged_auto(cache, starts, width, token_block: int = 8):
+    """Multi-sequence buffered copy: one window per batch row at per-row
+    offsets (the fused-round KV writeback)."""
+    return kv_pack_ragged(cache, starts, width=width, token_block=token_block,
+                          interpret=INTERPRET)
 
 
 def kv_unpack_auto(cache, buf, t0, token_block: int = 8):

@@ -58,6 +58,39 @@ def decode_attention_ref(q, k, v, kv_valid):
 
 
 # ---------------------------------------------------------------------------
+# batched decode attention (fused rounds: ragged per-sequence lengths)
+# ---------------------------------------------------------------------------
+
+def batched_decode_attention_ref(q, k, v, lengths):
+    """q: [B,Hq,D]; k/v: [B,S,Hkv,D]; lengths: [B] int32 (live tokens per
+    sequence, incl. the new one) -> [B,Hq,D].  `decode_attention_ref` with a
+    per-sequence validity mask — the dense oracle of the fused-round pass."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    valid = jnp.arange(s)[None, :] < lengths[:, None]              # [B,S]
+    qg = q.reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v)
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# kv_pack_ragged — fused-round writeback (per-sequence window offsets)
+# ---------------------------------------------------------------------------
+
+def kv_pack_ragged_ref(cache, starts, width: int):
+    """cache: [L,B,S,H,D]; starts: [B] -> [L,B,width,H,D], batch row b being
+    the window cache[:, b, starts[b]:starts[b]+width]."""
+    rows = [jax.lax.dynamic_slice_in_dim(cache[:, b], int(starts[b]), width,
+                                         axis=1)
+            for b in range(cache.shape[1])]
+    return jnp.stack(rows, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # paged decode attention (block-table gather over a shared page pool)
 # ---------------------------------------------------------------------------
 

@@ -1,13 +1,13 @@
 from repro.kvcache.cache import (
     decode_state_shapes,
-    init_decode_state,
     decode_state_specs,
+    init_decode_state,
     state_bytes,
 )
 from repro.kvcache.paged import (Block, BlockPool, PagedKVCache, PoolExhausted,
                                  blocks_for)
-from repro.kvcache.tiers import (KVTierManager, TierConfig, TIER_HBM,
-                                 TIER_HOST, TIER_SSD)
+from repro.kvcache.tiers import (TIER_HBM, TIER_HOST, TIER_SSD, KVTierManager,
+                                 TierConfig)
 
 __all__ = ["decode_state_shapes", "init_decode_state", "decode_state_specs",
            "state_bytes", "Block", "BlockPool", "PagedKVCache", "PoolExhausted",

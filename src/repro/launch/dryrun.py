@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import ARCHS, SHAPES, get_arch, supports_shape
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import make_cell, input_specs  # noqa: F401 (public API)
+from repro.launch.specs import input_specs, make_cell  # noqa: F401 (public API)
 
 # ---------------------------------------------------------------------------
 # v5e hardware constants (per chip)

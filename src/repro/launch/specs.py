@@ -22,12 +22,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.distributed.sharding import (batch_shardings, param_shardings,
-                                        state_shardings, _axes, _size)
+from repro.distributed.sharding import (_axes, _size, batch_shardings,
+                                        param_shardings, state_shardings)
 from repro.kvcache.cache import decode_state_shapes
 from repro.models import build_model
-from repro.training.train import TrainConfig, make_train_step
 from repro.training.optimizer import AdamWState
+from repro.training.train import TrainConfig, make_train_step
 
 
 def sds(shape, dtype):

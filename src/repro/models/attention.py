@@ -239,6 +239,63 @@ def attention_decode(x, p, cfg, k_cache, v_cache, kv_positions, pos, *,
     return out_proj(o, p), k_cache, v_cache
 
 
+def attention_decode_batch(x, p, cfg, k_cache, v_cache, kv_positions, pos,
+                           q_lens=None, *, rope: bool = True,
+                           backend: str = "xla"):
+    """Fused-round decode / chunk-pack attention: B sequences advance in ONE
+    pass at per-sequence positions (vs `attention_decode`'s shared scalar
+    `pos`).
+
+    x: [B,C,d] — C=1 decodes every sequence one step; C>1 packs one prefill
+    chunk per sequence, sequence b's chunk sitting at absolute positions
+    ``pos[b] .. pos[b]+q_lens[b]-1`` (rows past ``q_lens[b]`` are don't-care
+    padding for ragged chunk sets).  k/v_cache: [B,S,Hkv,Dh] (each sequence's
+    pool pages densified and padded to a common S); kv_positions: [B,S] int32
+    with −1 marking slots past each sequence's own live length; pos: [B]
+    int32.  Restricted to full-causal / no-ALiBi families (the cluster's
+    `fused_ok` gate).  Returns (out, k_cache, v_cache).
+    """
+    b, c, _ = x.shape
+    q, k_new, v_new = qkv_proj(x, p, cfg)
+    posv = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]     # [B,C]
+    lens = (jnp.full((b,), c, jnp.int32) if q_lens is None
+            else jnp.asarray(q_lens, jnp.int32))
+    if rope:
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    # scatter each sequence's new K/V window into its own cache rows at
+    # pos[b]: O(C) work per sequence (vs an O(S) full-cache select).  Ragged
+    # chunk tails (rows >= len_b) blend back to the original cache values so
+    # padding rows never land in the cache; when a short final chunk's
+    # padded window would overrun the cache end (pos[b] + C > S), the slice
+    # start backs up and the valid rows shift within it.
+    def _scatter(cache, new):
+        def one(cb, nb, p, ln):
+            pe = jnp.minimum(p, cb.shape[0] - c)
+            idx = jnp.arange(c, dtype=jnp.int32) - (p - pe)
+            keep = ((idx >= 0) & (idx < ln))[:, None, None]
+            orig = jax.lax.dynamic_slice_in_dim(cb, pe, c, axis=0)
+            win = jnp.where(keep,
+                            jnp.take(nb.astype(cb.dtype),
+                                     jnp.clip(idx, 0, c - 1), axis=0), orig)
+            return jax.lax.dynamic_update_slice_in_dim(cb, win, pe, axis=0)
+        return jax.vmap(one)(cache, new, pos, lens)
+
+    k_cache = _scatter(k_cache, k_new)
+    v_cache = _scatter(v_cache, v_new)
+    # padded query rows (>= len_b) get q_pos −1: their mask row is all-False
+    # (uniform-softmax garbage the caller never reads or writes back)
+    q_pos = jnp.where(posv < pos[:, None] + lens[:, None], posv, -1)
+    if backend == "pallas" and c == 1:
+        from repro.kernels import ops as kops
+        o = kops.batched_decode_attention_auto(q[:, 0], k_cache, v_cache,
+                                               pos + 1)[:, None]
+    else:
+        mask = build_mask(q_pos, kv_positions, causal=True)
+        o = attend(q, k_cache, v_cache, mask=mask, backend="xla")
+    return out_proj(o, p), k_cache, v_cache
+
+
 def cross_attention(x, p, cfg, k_cache, v_cache, backend: str = "xla"):
     """Decoder→encoder cross attention (no mask, no rope)."""
     b, s, _ = x.shape

@@ -13,9 +13,9 @@ unrolled.  Decode state (see kvcache/cache.py):
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn

@@ -9,9 +9,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models import ssm
 from repro.models.common import embed_init, logical_constraint, norm_apply, norm_init, split_keys
 from repro.models.losses import causal_lm_loss
-from repro.models import ssm
 
 
 class MambaLM:

@@ -6,10 +6,10 @@ Every model exposes: ``init(key)``, ``loss(params, batch)``,
 from __future__ import annotations
 
 from repro.configs.base import ArchConfig
-from repro.models.transformer import DecoderLM
-from repro.models.mamba_lm import MambaLM
-from repro.models.hybrid import HybridLM
 from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.mamba_lm import MambaLM
+from repro.models.transformer import DecoderLM
 
 
 def build_model(cfg: ArchConfig, backend: str = "xla", remat: bool = False):

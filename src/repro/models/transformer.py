@@ -78,7 +78,7 @@ class DecoderLM:
         return logical_constraint(logits, "batch", None, "vocab")
 
     def _layer(self, x, lp, *, mode, positions=None, kc=None, vc=None,
-               kv_positions=None, pos=None, collect_aux=False):
+               kv_positions=None, pos=None, q_lens=None, collect_aux=False):
         cfg = self.cfg
         x = logical_constraint(x, "batch", "seq", None)   # residual stream
         h = norm_apply(cfg.norm, x, lp["ln1"])
@@ -88,6 +88,12 @@ class DecoderLM:
                                              rope=rope, alibi=self._alibi,
                                              backend=self.backend)
             extra = (k, v)
+        elif mode == "decode_batch":
+            a, kc, vc = attn.attention_decode_batch(h, lp["attn"], cfg, kc, vc,
+                                                    kv_positions, pos,
+                                                    q_lens=q_lens, rope=rope,
+                                                    backend=self.backend)
+            extra = (kc, vc)
         else:
             a, kc, vc = attn.attention_decode(h, lp["attn"], cfg, kc, vc,
                                               kv_positions, pos, rope=rope,
@@ -227,6 +233,75 @@ class DecoderLM:
         if last:
             x = norm_apply(cfg.norm, x, sp["final_norm"])
             x = self._unembed(sp, x[:, -1:, :])[:, 0]
+        return x, kc, vc
+
+    def stage_decode_batch(self, sp, x, kc, vc, pos, *, first: bool,
+                           last: bool, token=None):
+        """Fused-round decode for one stage: B sequences each advance ONE
+        step in a single pipeline pass, sequence b's new token sitting at its
+        OWN position ``pos[b]`` (ragged lengths — vs `stage_decode`'s shared
+        scalar).  kc/vc: [Lstage,B,S,H,D] with S a common pad; pos: [B]."""
+        cfg = self.cfg
+        if first:
+            x = jnp.take(sp["embed"], token[:, None], axis=0)
+            if cfg.pos_emb == "learned":
+                x = x + jnp.take(sp["pos_table"], pos, axis=0)[:, None]
+        s_cache = kc.shape[2]
+        slots = jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+        kv_positions = jnp.where(slots <= pos[:, None], slots, -1)   # [B,S]
+
+        def body(x, xs):
+            lp, k1, v1 = xs
+            x, (k1, v1), _ = self._layer(x, lp, mode="decode_batch", kc=k1,
+                                         vc=v1, kv_positions=kv_positions,
+                                         pos=pos)
+            return x, (k1, v1)
+
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        if last:
+            x = norm_apply(cfg.norm, x, sp["final_norm"])
+            x = self._unembed(sp, x)[:, 0]
+        return x, kc, vc
+
+    def stage_prefill_chunk_batch(self, sp, x, kc, vc, pos, q_lens, *,
+                                  first: bool, last: bool, tokens=None):
+        """Fused chunk-set pass: one prefill chunk of EACH of B in-flight
+        sequences runs in a single pipeline pass.  Sequence b's chunk holds
+        ``q_lens[b]`` valid tokens at absolute positions ``pos[b] ..
+        pos[b]+q_lens[b]-1`` (rows past q_lens[b] are padding); each chunk
+        attends causally over its own cache prefix [0, pos[b]) plus itself.
+        Stage 0 passes `tokens` [B,Cmax]; the last stage returns each chunk's
+        final-valid-token logits [B,V] (only sequences whose prefill just
+        completed read theirs).  kc/vc: [Lstage,B,S,H,D]; pos/q_lens: [B]."""
+        cfg = self.cfg
+        if first:
+            x = jnp.take(sp["embed"], tokens, axis=0)
+            if cfg.pos_emb == "learned":
+                c = tokens.shape[1]
+                posm = pos[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+                x = x + jnp.take(sp["pos_table"],
+                                 jnp.clip(posm, 0, sp["pos_table"].shape[0] - 1),
+                                 axis=0)
+        c = x.shape[1]
+        s_cache = kc.shape[2]
+        slots = jnp.arange(s_cache, dtype=jnp.int32)[None, :]
+        kv_positions = jnp.where(slots < (pos + q_lens)[:, None], slots, -1)
+
+        def body(x, xs):
+            lp, k1, v1 = xs
+            x, (k1, v1), _ = self._layer(x, lp, mode="decode_batch", kc=k1,
+                                         vc=v1, kv_positions=kv_positions,
+                                         pos=pos, q_lens=q_lens)
+            return x, (k1, v1)
+
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        if last:
+            x = norm_apply(cfg.norm, x, sp["final_norm"])
+            # per-sequence final valid token (ragged chunks): row q_lens[b]-1
+            sel = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                   == (q_lens - 1)[:, None]).astype(x.dtype)       # [B,C]
+            x = jnp.einsum("bc,bcd->bd", sel, x)
+            x = self._unembed(sp, x[:, None])[:, 0]
         return x, kc, vc
 
     def stage_decode(self, sp, x, kc, vc, pos, *, first: bool, last: bool,

@@ -1,4 +1,6 @@
+from repro.serving.engine import EngineReport, ServingEngine
 from repro.serving.request import Request
-from repro.serving.engine import ServingEngine, EngineReport
+from repro.serving.scheduler import RoundScheduler, StepPlan
 
-__all__ = ["Request", "ServingEngine", "EngineReport"]
+__all__ = ["EngineReport", "Request", "RoundScheduler", "ServingEngine",
+           "StepPlan"]

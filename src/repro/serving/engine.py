@@ -35,10 +35,11 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.cluster import DejaVuCluster
-from repro.core.dejavulib.transport import HardwareModel, DEFAULT_HW
+from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 from repro.kvcache.paged import PoolExhausted
 from repro.serving.request import Microbatch, Request, form_microbatches
 from repro.serving.sampling import greedy
+from repro.serving.scheduler import RoundScheduler, StepPlan
 
 
 class _SingleSeq:
@@ -69,6 +70,11 @@ class EngineReport:
     # modeled prefill seconds co-scheduled in that round (the decode stall a
     # long prompt inflicts; chunk-interleaving bounds it to one chunk pass)
     prefill_stall_trace: List[float] = field(default_factory=list)
+    # one entry per continuous-batching round: pipeline passes executed that
+    # round.  Fused rounds run ONE batched decode pass (plus one chunk-set
+    # pass while prefills are in flight, plus admission first-passes); the
+    # per-sequence oracle path runs one pass per live sequence per round.
+    pass_trace: List[int] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -84,6 +90,7 @@ class ServingEngine:
                  host_cache_blocks: Optional[int] = None,
                  ssd_cache_blocks: Optional[int] = None,
                  prefill_chunk_tokens: Optional[int] = None,
+                 fused_rounds: Optional[bool] = None,
                  hw: HardwareModel = DEFAULT_HW,
                  sampler: Callable = greedy):
         self.cfg = cfg
@@ -98,7 +105,8 @@ class ServingEngine:
                                      tiered=tiered,
                                      host_cache_blocks=host_cache_blocks,
                                      ssd_cache_blocks=ssd_cache_blocks,
-                                     prefill_chunk_tokens=prefill_chunk_tokens)
+                                     prefill_chunk_tokens=prefill_chunk_tokens,
+                                     fused_rounds=fused_rounds)
 
     # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
@@ -165,86 +173,52 @@ class ServingEngine:
                        fail_at: Optional[Dict[int, int]] = None) -> EngineReport:
         """Continuous-batching loop (requires ``paged=True``).
 
-        Every round: (1) resume preempted / admit queued requests into freed
-        pool space, (2) advance EVERY live request one step, (3) retire
-        finished requests, returning their blocks.  `fail_at` counts
-        per-request steps exactly like `run`'s global steps.  Each request
-        generates exactly `max_new` tokens (or stops at eos) — unlike `run`,
-        no request is held hostage by the longest peer in its microbatch.
+        The policy (admission, resume, preemption victims, retirement) lives
+        in `RoundScheduler`; this method is the thin driver that executes one
+        `StepPlan` per round: (1) the scheduler resumes preempted / admits
+        queued requests into freed pool space, (2) every live request
+        advances one step, (3) finished requests retire, returning their
+        blocks.  `fail_at` counts per-request steps exactly like `run`'s
+        global steps.  Each request generates exactly `max_new` tokens (or
+        stops at eos) — unlike `run`, no request is held hostage by the
+        longest peer in its microbatch.
 
         Prompts longer than `prefill_chunk_tokens` prefill CHUNK-INTERLEAVED:
         each round runs one chunk pass per in-flight prefill alongside one
         decode step per running sequence, so a long prompt stalls co-resident
         decodes by at most one chunk instead of its whole length
         (`EngineReport.prefill_stall_trace` records the per-round stall).
+
+        With `fused_rounds` (and a config the cluster's `fused_ok` gate
+        accepts), the round's decodes run as ONE batched pipeline pass over
+        ragged per-sequence lengths and all in-flight chunk prefills pack
+        into one chunk-set pass — `EngineReport.pass_trace` records the
+        per-round pass count — with outputs token-identical to the
+        per-sequence oracle path (the knob off).
         """
         cl = self.cluster
         assert cl.paged, "run_continuous requires ServingEngine(..., paged=True)"
         fail_at = dict(fail_at or {})
-        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        active: List[Request] = []
-        preempted: List[Request] = []
-        next_step: Dict[int, int] = {r.rid: 0 for r in requests}
+        sched = RoundScheduler(cl, requests, max_active=max_active)
         report = EngineReport(tokens={r.rid: r.tokens for r in requests})
         self._gstep = 0
-        while queue or active or preempted:
+        fused = cl.fused_ok
+        while sched.pending():
             cl.round_prefill_model_s = 0.0
             self._round_decodes = 0
-            # --- resume preempted, then admit new, while blocks are free ---
-            while preempted and len(active) < max_active and \
-                    cl.can_resume(preempted[0].rid, len(active)):
-                r = preempted.pop(0)
-                cl.resume_seq(r.rid)
-                active.append(r)
-            while queue and len(active) < max_active and \
-                    cl.can_admit(queue[0].prompt_len, len(active),
-                                 token_ids=(queue[0].prompt if cl.tiered
-                                            else None)):
-                r = queue.pop(0)
-                self._advance_seq(r, next_step, active, preempted, report,
-                                  fail_at)
-                active.append(r)
-            if not active:
-                if not (queue or preempted):
-                    break
-                raise MemoryError("pool cannot admit any request — "
-                                  "kv_pool_blocks too small for this trace")
-            # --- one decode step for every live request ---------------------
-            report.batch_trace.append(len(active))
-            for r in list(active):
-                if r.rid not in [a.rid for a in active]:
-                    continue        # dropped by a mid-round preemption
-                if next_step[r.rid] >= r.max_new or r.done:
-                    continue        # budget spent at admission (or eos'd)
-                while True:
-                    try:
-                        self._advance_seq(r, next_step, active, preempted,
-                                          report, fail_at)
-                        break
-                    except PoolExhausted:
-                        # only a sequence with device-resident blocks frees
-                        # anything (under swapping they are all offloaded
-                        # between steps and preemption cannot help); a
-                        # mid-prefill sequence is never a victim — its chunk
-                        # cursor assumes the partial table stays put
-                        victim = next(
-                            (v for v in reversed(active) if v is not r
-                             and next_step[v.rid] > 0
-                             and cl.resident_blocks(v.rid) > 0), None)
-                        if victim is None:
-                            raise
-                        cl.preempt_seq(victim.rid)
-                        active.remove(victim)
-                        preempted.append(victim)
-                        report.preemptions += 1
+            self._round_passes = 0
+            plan = sched.plan_round(
+                lambda r: self._advance_seq(r, sched, report, fail_at))
+            report.batch_trace.append(plan.n_active)
+            if fused:
+                self._execute_round_fused(plan, sched, report, fail_at)
+            else:
+                self._execute_round(plan, sched, report, fail_at)
             # --- retire finished sequences (blocks free immediately) --------
-            for r in list(active):
-                if next_step[r.rid] >= r.max_new or r.done:
-                    r.done = True
-                    cl.free_seq(r.rid)
-                    active.remove(r)
+            sched.retire()
             if self._round_decodes:
                 report.prefill_stall_trace.append(cl.round_prefill_model_s)
+            report.pass_trace.append(self._round_passes)
         report.peak_kv_bytes = cl.kv_bytes_peak
         report.prefill_tokens_total = cl.prefill_tokens_total
         report.prefill_tokens_saved = cl.prefill_tokens_saved
@@ -252,8 +226,169 @@ class ServingEngine:
             report.tier_stats = cl.tier_stats()
         return report
 
-    def _advance_seq(self, r: Request, next_step: Dict[int, int],
-                     active: List[Request], preempted: List[Request],
+    # ------------------------------------------------------------------
+    # per-sequence oracle path: one pipeline pass per request per round
+    # ------------------------------------------------------------------
+    def _execute_round(self, plan: StepPlan, sched: RoundScheduler,
+                       report: EngineReport, fail_at: Dict[int, int]) -> None:
+        for r in plan.work:
+            if not sched.is_active(r.rid):
+                continue        # dropped by a mid-round preemption
+            if sched.next_step[r.rid] >= r.max_new or r.done:
+                continue        # budget spent at admission (or eos'd)
+            while True:
+                try:
+                    self._advance_seq(r, sched, report, fail_at)
+                    break
+                except PoolExhausted:
+                    self._preempt_victim_or_raise(sched, report,
+                                                  exclude=(r.rid,))
+
+    # ------------------------------------------------------------------
+    # fused rounds: ONE batched pass per round (+ one chunk-set pass while
+    # prefills are in flight)
+    # ------------------------------------------------------------------
+    def _execute_round_fused(self, plan: StepPlan, sched: RoundScheduler,
+                             report: EngineReport,
+                             fail_at: Dict[int, int]) -> None:
+        # snapshot the round's split BEFORE running anything: like the oracle
+        # path, every request advances ONE step per round — a prompt whose
+        # prefill completes this round decodes only from the NEXT round on
+        pf = [r for r in plan.work if sched.is_active(r.rid)
+              and sched.next_step[r.rid] == 0 and not r.done]
+        dec0 = [r for r in plan.work if sched.next_step[r.rid] >= 1]
+        if pf and not self._fused_prefill_pass(pf, sched, report, fail_at):
+            return              # a worker died: recovered state runs next round
+        while True:
+            dec = [r for r in dec0 if sched.is_active(r.rid) and not r.done
+                   and 1 <= sched.next_step[r.rid] < r.max_new]
+            if not dec:
+                return
+            try:
+                self._fused_decode_pass(dec, sched, report, fail_at)
+                return
+            except PoolExhausted:
+                # same victim policy as the oracle path, except the whole
+                # batch is "the current request": shrink the round instead —
+                # preempt the youngest resident sequence (possibly a batch
+                # member) and retry the pass without it
+                if len(dec) == 1:
+                    self._preempt_victim_or_raise(sched, report,
+                                                  exclude=(dec[0].rid,))
+                else:
+                    self._preempt_victim_or_raise(sched, report)
+
+    def _preempt_victim_or_raise(self, sched: RoundScheduler,
+                                 report: EngineReport,
+                                 exclude=()) -> None:
+        """Handle a full pool mid-round: swap out the scheduler's chosen
+        victim and let the caller retry, or re-raise the active
+        PoolExhausted when nothing preemptible remains."""
+        victim = sched.pick_victim(exclude=exclude)
+        if victim is None:
+            raise
+        self.cluster.preempt_seq(victim.rid)
+        sched.preempt(victim)
+        report.preemptions += 1
+
+    def _fused_prefill_pass(self, pf: List[Request], sched: RoundScheduler,
+                            report: EngineReport,
+                            fail_at: Dict[int, int]) -> bool:
+        """Advance every in-flight prefill one chunk: chunk-mode prefills
+        pack into ONE pipeline pass; oracle-mode ones (chunking disabled)
+        fall back to one pass each.  Returns False if a worker death was
+        recovered (the round ends; rolled-back work reruns next round)."""
+        cl = self.cluster
+        for _ in pf:            # one logical step per packed prefill, so
+            self._gstep += 1    # fail_at points land like the oracle path's
+            if self._gstep in fail_at:
+                cl.inject_failure(fail_at.pop(self._gstep))
+                report.failures += 1
+        try:
+            for r in pf:
+                # staging allocates (adopt_prefix / whole-prompt tables), and
+                # the oracle-mode passes below append — both can hit a full
+                # pool, which preempts a victim and retries like the oracle
+                # path (a mid-prefill sequence is never a victim, so retrying
+                # cannot disturb the prefills already staged)
+                while not cl.prefill_pending(r.rid):
+                    try:
+                        cl.prefill_seq_begin(r.rid, r.prompt, r.max_new)
+                    except PoolExhausted:
+                        self._preempt_victim_or_raise(sched, report)
+            chunk = [r for r in pf if cl.prefill_mode(r.rid) == "chunk"]
+            rest = [r for r in pf if cl.prefill_mode(r.rid) != "chunk"]
+            if chunk:
+                out = cl.prefill_chunkset_pass([r.rid for r in chunk])
+                self._round_passes += 1
+                report.steps_executed += len(chunk)
+                for r in chunk:
+                    self._finish_prefill_step(r, out[r.rid], sched)
+            for r in rest:
+                while True:
+                    try:
+                        logits = cl.prefill_seq_step(r.rid)
+                        break
+                    except PoolExhausted:
+                        self._preempt_victim_or_raise(sched, report)
+                self._round_passes += 1
+                report.steps_executed += 1
+                self._finish_prefill_step(r, logits, sched)
+        except RuntimeError:
+            self._recover_fused(sched, report)
+            return False
+        return True
+
+    def _finish_prefill_step(self, r: Request, logits, sched) -> None:
+        if logits is None:
+            return              # prefill still in flight
+        tok = self.sampler(logits, 0)
+        self._emit(_SingleSeq(r), tok, 0)
+        sched.next_step[r.rid] = 1
+
+    def _fused_decode_pass(self, dec: List[Request], sched: RoundScheduler,
+                           report: EngineReport,
+                           fail_at: Dict[int, int]) -> None:
+        cl = self.cluster
+        for _ in dec:
+            self._gstep += 1
+            if self._gstep in fail_at:
+                cl.inject_failure(fail_at.pop(self._gstep))
+                report.failures += 1
+        rids = [r.rid for r in dec]
+        steps = [sched.next_step[r.rid] for r in dec]
+        last = np.asarray([r.tokens[s - 1] for r, s in zip(dec, steps)],
+                          np.int32)
+        try:
+            logits = cl.decode_batch(rids, last, steps)
+        except RuntimeError:
+            self._recover_fused(sched, report)
+            return              # rolled-back steps rerun next round
+        self._round_passes += 1
+        for i, (r, s) in enumerate(zip(dec, steps)):
+            tok = self.sampler(logits[i:i + 1], s)
+            self._emit(_SingleSeq(r), tok, s)
+            sched.next_step[r.rid] = s + 1
+            self._round_decodes += 1
+            report.steps_executed += 1
+
+    def _recover_fused(self, sched: RoundScheduler,
+                       report: EngineReport) -> None:
+        """Detect-and-recover after a worker died inside a fused pass: every
+        covered sequence rolls back to its last replicated step (mid-prefill
+        ones restart from scratch), exactly like the per-sequence path —
+        the next rounds regenerate the rolled-back tokens bit-identically."""
+        cl = self.cluster
+        covered = sched.covered()
+        live = [a.rid for a in covered if not a.done]
+        resume = cl.detect_and_recover(live)
+        report.recoveries += 1
+        self._apply_resume_seqs(resume, covered, sched.next_step, report)
+        for rr in covered:
+            if sched.next_step.get(rr.rid, 1) == 0:
+                cl.abort_prefill(rr.rid)
+
+    def _advance_seq(self, r: Request, sched: RoundScheduler,
                      report: EngineReport, fail_at: Dict[int, int]) -> None:
         """One per-request step (prefill if next_step==0, else decode), with
         the same failure-injection / detect-recover contract as `_advance`.
@@ -261,11 +396,12 @@ class ServingEngine:
         failed worker die with it, so they too must rebuild from replicas
         and roll back."""
         cl = self.cluster
+        next_step = sched.next_step
         self._gstep += 1
         if self._gstep in fail_at:
             cl.inject_failure(fail_at.pop(self._gstep))
             report.failures += 1
-        covered = active + preempted
+        covered = sched.covered()
         live = [a.rid for a in covered if not a.done]
         if r.rid not in live:
             live.append(r.rid)
@@ -290,6 +426,7 @@ class ServingEngine:
         prefill logits — else one decode step."""
         cl = self.cluster
         i = next_step[r.rid]
+        self._round_passes += 1
         if i == 0:
             if not cl.prefill_pending(r.rid):
                 cl.prefill_seq_begin(r.rid, r.prompt, r.max_new)

@@ -1,7 +1,8 @@
-from repro.training.optimizer import adamw_init, adamw_update, global_norm
-from repro.training.train import make_train_step, TrainConfig
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
 from repro.training.data import SyntheticDataPipeline
-from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.training.optimizer import adamw_init, adamw_update, global_norm
+from repro.training.train import TrainConfig, make_train_step
 
 __all__ = ["adamw_init", "adamw_update", "global_norm", "make_train_step",
            "TrainConfig", "SyntheticDataPipeline", "save_checkpoint",

@@ -1,16 +1,17 @@
 """DéjàVuLib: primitives, repartitioning, transports, overlap engine."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="optional dev dep (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.dejavulib import (HostMemoryStore, SSDStore, LocalTransport,
-                                  HostLinkTransport, NetworkTransport,
-                                  PipelineTopo, StreamEngine, CacheChunk,
-                                  flush, fetch, gather, scatter,
-                                  plan_repartition, stream_in, stream_out)
+from repro.core.dejavulib import (CacheChunk, HostLinkTransport,
+                                  HostMemoryStore, LocalTransport,
+                                  NetworkTransport, PipelineTopo, SSDStore,
+                                  StreamEngine, fetch, flush, gather,
+                                  plan_repartition, scatter, stream_in,
+                                  stream_out)
 
 
 def test_flush_fetch_roundtrip(tmp_path):

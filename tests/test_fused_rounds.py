@@ -1,0 +1,260 @@
+"""Fused batched rounds: ONE pipeline pass per decode round.
+
+Token identity: with `fused_rounds` on, every trace must reproduce the
+per-sequence oracle path (the knob off) bit-for-bit — across prompt mixes,
+chunked prefill + prefix adoption, preemption, and mid-trace worker
+failures (greedy regeneration is deterministic, so any pass packing that
+computes the same per-sequence math yields the same tokens).  Shape: an
+8-active decode round executes one batched pass, `EngineReport.pass_trace`
+records it.  Plus the disaggregated admission-discount regression
+(cluster.can_admit) and the planner/costmodel round-time terms.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.planner import plan
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # optional dev dep (requirements-dev.txt)
+    HAVE_HYPOTHESIS = False
+
+CFG = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
+                          dtype="float32", num_layers=2)
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+RNG = np.random.default_rng(0)
+
+
+def engine(**kw):
+    return ServingEngine(CFG, MODEL, PARAMS, 2, paged=True, **kw)
+
+
+def mkreqs(prompts, max_new=4):
+    if isinstance(max_new, int):
+        max_new = [max_new] * len(prompts)
+    return [Request(rid=i, prompt=p.copy(), max_new=m)
+            for i, (p, m) in enumerate(zip(prompts, max_new))]
+
+
+def _prompts(n, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, (lens[i % len(lens)],)
+                         ).astype(np.int32) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# token identity + pass shape
+# ---------------------------------------------------------------------------
+
+def test_fused_token_identity_mixed_trace():
+    prompts = _prompts(6, [8, 12])
+    mx = [6, 3, 7, 4, 3, 6]
+    base = engine(kv_pool_blocks=64).run_continuous(
+        mkreqs(prompts, mx), max_active=4)
+    fus = engine(kv_pool_blocks=64, fused_rounds=True).run_continuous(
+        mkreqs(prompts, mx), max_active=4)
+    assert fus.tokens == base.tokens
+    assert fus.batch_trace == base.batch_trace
+    # fused rounds do strictly fewer pipeline passes on the same trace
+    assert sum(fus.pass_trace) < sum(base.pass_trace)
+
+
+def test_fused_8_active_round_is_one_pass():
+    """Acceptance: an 8-active decode round = ONE batched pipeline pass
+    (the oracle path runs 8), with token-identical output."""
+    prompts = _prompts(8, [8])
+    base = engine(kv_pool_blocks=256).run_continuous(
+        mkreqs(prompts, 6), max_active=8)
+    fus = engine(kv_pool_blocks=256, fused_rounds=True).run_continuous(
+        mkreqs(prompts, 6), max_active=8)
+    assert fus.tokens == base.tokens
+    # rounds after the admission round hold 8 decoding sequences
+    steady = [(b, p) for b, p in zip(fus.pass_trace[1:], fus.batch_trace[1:])]
+    fused_steady = [p for p, b in steady if b == 8]
+    assert fused_steady and all(p == 1 for p in fused_steady), fus.pass_trace
+    base_steady = [p for p, b in zip(base.pass_trace[1:],
+                                     base.batch_trace[1:]) if b == 8]
+    assert all(p == 8 for p in base_steady), base.pass_trace
+
+
+def test_fused_chunked_prefill_packs_into_one_pass():
+    """Two long prompts admitted together: their chunk passes pack into ONE
+    chunk-set pass per round alongside the single decode pass."""
+    prompts = _prompts(2, [8]) + _prompts(2, [40], seed=3)
+    kw = dict(kv_pool_blocks=128, prefill_chunk_tokens=8)
+    base = engine(**kw).run_continuous(mkreqs(prompts, 6), max_active=4)
+    fus = engine(fused_rounds=True, **kw).run_continuous(
+        mkreqs(prompts, 6), max_active=4)
+    assert fus.tokens == base.tokens
+    # once admitted, a round is at most one chunk-set pass + one decode pass
+    assert all(p <= 2 for p in fus.pass_trace[1:]), fus.pass_trace
+    # the oracle path runs one pass per prefill chunk per round instead
+    assert max(base.pass_trace[1:]) > 2, base.pass_trace
+    assert fus.prefill_stall_trace == pytest.approx(base.prefill_stall_trace)
+
+
+def test_fused_failure_recovery_token_identical():
+    prompts = _prompts(6, [8, 12])
+    mx = [6, 3, 7, 4, 3, 6]
+    base = engine(kv_pool_blocks=64).run_continuous(
+        mkreqs(prompts, mx), max_active=4)
+    for g, wid in ((9, 1), (5, 0)):
+        eng = engine(kv_pool_blocks=64, replication=True, fused_rounds=True)
+        rep = eng.run_continuous(mkreqs(prompts, mx), max_active=4,
+                                 fail_at={g: wid})
+        assert rep.failures == 1 and rep.recoveries == 1
+        assert rep.tokens == base.tokens
+        kinds = [e["kind"] for e in eng.cluster.controller.events]
+        assert "failure" in kinds and "recovery" in kinds
+
+
+def test_fused_preemption_tiny_pool():
+    prompts = _prompts(2, [8], seed=5)
+    base = engine(kv_pool_blocks=64).run_continuous(
+        mkreqs(prompts, 10), max_active=2)
+    fus = engine(kv_pool_blocks=4, fused_rounds=True).run_continuous(
+        mkreqs(prompts, 10), max_active=2)
+    assert fus.preemptions >= 1
+    assert fus.tokens == base.tokens
+
+
+@pytest.mark.slow
+def test_fused_swapping_and_tiered_adoption():
+    prompts = _prompts(6, [8, 12])
+    base = engine(kv_pool_blocks=64).run_continuous(
+        mkreqs(prompts, 5), max_active=4)
+    rs = engine(kv_pool_blocks=64, swapping=True,
+                fused_rounds=True).run_continuous(mkreqs(prompts, 5),
+                                                  max_active=4)
+    assert rs.tokens == base.tokens
+    shared = _prompts(1, [16], seed=9)[0]
+    sp = [np.concatenate([shared,
+                          _prompts(1, [6], seed=10 + i)[0]]) for i in range(3)]
+    kw = dict(tiered=True, kv_pool_blocks=128, host_cache_blocks=16,
+              ssd_cache_blocks=64, prefill_chunk_tokens=4)
+    oracle = engine(**kw).run_continuous(mkreqs(sp, 3), max_active=2)
+    fus = engine(fused_rounds=True, **kw).run_continuous(mkreqs(sp, 3),
+                                                         max_active=2)
+    assert fus.tokens == oracle.tokens
+    assert fus.prefill_tokens_saved == oracle.prefill_tokens_saved > 0
+
+
+# ---------------------------------------------------------------------------
+# property test: batched == per-sequence across random traces
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=6, deadline=None)
+    @given(n=st.integers(2, 5), shared_blocks=st.integers(0, 2),
+           tail=st.integers(1, 10), chunk=st.integers(0, 10),
+           bs=st.sampled_from([4, 8]), max_active=st.integers(2, 4),
+           pool=st.sampled_from([24, 128]),
+           fail=st.one_of(st.none(), st.tuples(st.integers(3, 12),
+                                               st.integers(0, 1))),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_fused_equals_per_sequence(n, shared_blocks, tail,
+                                                chunk, bs, max_active, pool,
+                                                fail, seed):
+        """Any (active-set size, prompt/suffix lengths, kv block size, chunk
+        size, pool pressure, mid-trace failure point): the fused batched
+        rounds reproduce the per-sequence oracle's tokens exactly —
+        preemptions and recoveries included."""
+        rng = np.random.default_rng(seed)
+        sysp = rng.integers(0, CFG.vocab_size,
+                            (shared_blocks * bs,)).astype(np.int32)
+        prompts = [np.concatenate([
+            sysp, rng.integers(0, CFG.vocab_size,
+                               (tail + (i % 3),)).astype(np.int32)])
+            for i in range(n)]
+        mx = [int(rng.integers(1, 6)) for _ in range(n)]
+        kw = dict(kv_pool_blocks=pool, kv_block_size=bs,
+                  prefill_chunk_tokens=chunk)
+        fail_at = dict([fail]) if fail else None
+        if fail:
+            kw["replication"] = True
+        base = engine(**kw).run_continuous(
+            mkreqs(prompts, mx), max_active=max_active, fail_at=fail_at)
+        fus = engine(fused_rounds=True, **kw).run_continuous(
+            mkreqs(prompts, mx), max_active=max_active, fail_at=fail_at)
+        assert fus.tokens == base.tokens
+
+
+# ---------------------------------------------------------------------------
+# disaggregated admission discount (cluster.can_admit regression)
+# ---------------------------------------------------------------------------
+
+def test_disaggregated_admission_counts_prefix_reuse():
+    """can_admit used to consult the prefix index only in colocated mode, so
+    disaggregated admission over-reserved token-side blocks for prompts
+    whose prefix would be adopted/re-shared: with a 7-block pool and
+    24-token prompts sharing a 2-block prefix, the second request needs 5
+    blocks unshared but only 3 with the discount — it must run CONCURRENTLY
+    with the first, token-identically."""
+    shared = _prompts(1, [24], seed=21)[0]
+    reqs = lambda: mkreqs([shared, shared], 3)                     # noqa: E731
+    kw = dict(tiered=True, host_cache_blocks=16, ssd_cache_blocks=64)
+    base = engine(kv_pool_blocks=64, **kw).run_continuous(reqs(), max_active=2)
+    eng = ServingEngine(CFG, MODEL, PARAMS, 2, mode="disaggregated",
+                        dp_split=(1, 1), paged=True, kv_pool_blocks=7, **kw)
+    rep = eng.run_continuous(reqs(), max_active=2)
+    assert rep.tokens == base.tokens
+    assert max(rep.batch_trace) == 2, \
+        f"prefix-discounted admission must run both requests: {rep.batch_trace}"
+    # the token-side pool really did re-share the streamed prefix blocks
+    w = eng.cluster.token_group[0]
+    assert w.pool.peak_used_blocks <= 7
+
+
+def test_colocated_admission_discount_unchanged():
+    """The colocated discount (PR-2 behavior) still admits a prompt whose
+    full blocks are live-shared when the raw need exceeds the free count."""
+    shared = _prompts(1, [24], seed=22)[0]
+    kw = dict(tiered=True, host_cache_blocks=16, ssd_cache_blocks=64)
+    base = engine(kv_pool_blocks=64, **kw).run_continuous(
+        mkreqs([shared, shared], 3), max_active=2)
+    rep = engine(kv_pool_blocks=7, **kw).run_continuous(
+        mkreqs([shared, shared], 3), max_active=2)
+    assert rep.tokens == base.tokens
+    assert max(rep.batch_trace) == 2
+
+
+# ---------------------------------------------------------------------------
+# planner / costmodel round-time terms
+# ---------------------------------------------------------------------------
+
+def test_decode_round_time_o1_in_active_count():
+    cfg = PAPER_ARCHS["opt-66b"]
+    per = [cm.decode_round_time(cfg, n, 1500, cfg.num_layers, 8, fused=False)
+           for n in (1, 8, 16)]
+    fus = [cm.decode_round_time(cfg, n, 1500, cfg.num_layers, 8, fused=True)
+           for n in (1, 8, 16)]
+    # per-seq grows linearly; fused grows only by the extra KV bytes
+    assert per[1] == pytest.approx(8 * per[0])
+    assert fus[1] < 2 * fus[0] and fus[2] < 2 * fus[0]
+    assert per[1] / fus[1] >= 2.0
+    # n=1 degenerates to the same single pass on both sides
+    assert per[0] == pytest.approx(fus[0])
+
+
+def test_planner_fused_round_terms_consistent():
+    cfg = PAPER_ARCHS["opt-66b"]
+    wl = cm.WorkloadSpec(prompt_len=1500, new_tokens=32, microbatch=8)
+    p = plan(cfg, wl, 8, paged=True)
+    ctx = wl.prompt_len + wl.new_tokens
+    assert p.round_time_perseq_s == pytest.approx(cm.decode_round_time(
+        cfg, wl.microbatch, ctx, cfg.num_layers, 64, fused=False))
+    assert p.round_time_fused_s == pytest.approx(cm.decode_round_time(
+        cfg, wl.microbatch, ctx, cfg.num_layers, 64, fused=True))
+    assert p.fused_round_speedup == pytest.approx(
+        p.round_time_perseq_s / p.round_time_fused_s)
+    assert p.fused_round_speedup >= 2.0

@@ -6,8 +6,8 @@ import jax
 import pytest
 
 from repro.configs import ARCHS, SHAPES, get_arch, supports_shape
-from repro.launch.specs import input_specs
 from repro.kvcache.cache import decode_state_shapes
+from repro.launch.specs import input_specs
 from repro.models import build_model
 
 pytestmark = pytest.mark.slow  # full sweep; excluded from `pytest -m "not slow"`

@@ -4,12 +4,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ref
+from repro.kernels.decode_attention import (batched_decode_attention,
+                                            decode_attention)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.kv_pack import kv_pack, kv_unpack
+from repro.kernels.kv_pack import kv_pack, kv_pack_ragged, kv_unpack
 from repro.kernels.paged_prefill import paged_prefill_attention
 from repro.kernels.ssd_scan import ssd_scan
-from repro.kernels import ref
 from repro.models.ssm import ssd_chunked
 
 pytestmark = pytest.mark.slow  # full sweep; excluded from `pytest -m "not slow"`
@@ -57,6 +58,66 @@ def test_decode_attention(b, s, hq, hkv, d, bk, n_valid, dtype):
     expected = ref.decode_attention_ref(q, k, v, valid)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expected, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,hq,hkv,d,bk,lengths", [
+    (3, 128, 4, 2, 16, 32, (100, 128, 1)),       # ragged incl. extremes
+    (2, 100, 8, 2, 32, 64, (37, 99)),            # padding path
+    (4, 64, 4, 4, 16, 64, (64, 64, 64, 64)),     # uniform full
+    (1, 256, 2, 1, 64, 256, (200,)),
+])
+def test_batched_decode_attention(b, s, hq, hkv, d, bk, lengths, dtype):
+    """Fused-round kernel vs dense oracle: one launch, B sequences each
+    masked to its OWN live length (vs `decode_attention`'s shared mask)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = batched_decode_attention(q, k, v, lens, block_k=bk)
+    expected = ref.batched_decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_batched_decode_matches_per_sequence():
+    """Semantic check behind fused rounds: the batched launch reproduces B
+    independent single-sequence `decode_attention` calls bit-for-bit."""
+    b, s, hq, hkv, d = 3, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    lens = jnp.asarray([17, 64, 5], jnp.int32)
+    out = batched_decode_attention(q, k, v, lens, block_k=32)
+    for i in range(b):
+        one = decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                               jnp.arange(s) < int(lens[i]), block_k=32)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]), np.asarray(one),
+                                   rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,B,S,H,D,starts,w,tb", [
+    (3, 3, 64, 4, 16, (0, 16, 56), 8, 8),
+    (2, 2, 32, 2, 8, (24, 0), 8, 8),             # tail + head windows
+    (1, 4, 48, 2, 16, (8, 8, 40, 16), 8, 4),     # repeated offsets, tb 4
+    (2, 1, 16, 1, 8, (8,), 8, 8),                # single row
+])
+def test_kv_pack_ragged(L, B, S, H, D, starts, w, tb, dtype):
+    """Multi-sequence buffered copy vs oracle: one launch packs one window
+    per batch row, each at its OWN offset (the fused-round writeback)."""
+    cache = jax.random.normal(KEY, (L, B, S, H, D), dtype)
+    st = jnp.asarray(starts, jnp.int32)
+    packed = kv_pack_ragged(cache, st, width=w, token_block=tb)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(ref.kv_pack_ragged_ref(cache, st, w)))
+    # row b of the ragged pack == the scalar kv_pack of that row's window
+    for bi in range(B):
+        one = kv_pack(cache[:, bi:bi + 1], int(st[bi]), width=w, token_block=tb)
+        np.testing.assert_array_equal(np.asarray(packed[:, bi:bi + 1]),
+                                      np.asarray(one))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -13,7 +13,7 @@ from repro.core import costmodel as cm
 from repro.core.dejavulib import HostMemoryStore, SSDStore, StreamEngine
 from repro.core.planner import MachineSpec, TierSpec, min_token_depth, plan
 from repro.kvcache.paged import BlockPool, PagedKVCache
-from repro.kvcache.tiers import KVTierManager, TierConfig, TIER_HOST, TIER_SSD
+from repro.kvcache.tiers import TIER_HOST, TIER_SSD, KVTierManager, TierConfig
 
 try:
     from hypothesis import given, settings, strategies as st
