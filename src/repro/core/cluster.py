@@ -221,10 +221,15 @@ class DejaVuCluster:
         """Fused batched rounds are exact only where the chunked-decode path
         is (full-causal dense/moe, no patch/meta context slots), and the
         batched mask path carries no ALiBi bias — everything else falls back
-        to the per-sequence oracle path even with the knob on."""
+        to the per-sequence oracle path even with the knob on.  Sliding
+        windows and meta tokens are excluded EXPLICITLY (not just via the
+        family list): a dense config carrying either would otherwise pass
+        the gate and decode wrong tokens silently."""
         return (self.fused_rounds and self.paged
                 and self.cfg.family in ("dense", "moe")
                 and not self.cfg.context_overhead
+                and self.cfg.sliding_window == 0
+                and self.cfg.num_meta_tokens == 0
                 and self.cfg.pos_emb != "alibi")
 
     def can_admit(self, prompt_len: int, n_active: int,

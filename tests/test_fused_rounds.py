@@ -148,6 +148,29 @@ def test_fused_swapping_and_tiered_adoption():
     assert fus.prefill_tokens_saved == oracle.prefill_tokens_saved > 0
 
 
+def test_fused_gate_excludes_window_and_meta():
+    """A dense config carrying a sliding window or meta tokens must NOT pass
+    the fused gate: the batched mask does not carry window/meta bounds, so
+    fusing such a config would decode wrong tokens silently.  With the knob
+    on, the engine must fall back to the per-sequence path cleanly."""
+    prompts = _prompts(3, [8])
+    for patch in (dict(sliding_window=8),
+                  dict(num_meta_tokens=2),
+                  dict(sliding_window=8, num_meta_tokens=2)):
+        cfg = dataclasses.replace(CFG, **patch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        base = ServingEngine(cfg, model, params, 2, paged=True,
+                             kv_pool_blocks=64).run_continuous(
+            mkreqs(prompts, 3), max_active=3)
+        eng = ServingEngine(cfg, model, params, 2, paged=True,
+                            kv_pool_blocks=64, fused_rounds=True)
+        assert eng.cluster.fused_ok is False, patch
+        rep = eng.run_continuous(mkreqs(prompts, 3), max_active=3)
+        assert rep.tokens == base.tokens
+        assert rep.pass_trace == base.pass_trace, patch
+
+
 # ---------------------------------------------------------------------------
 # property test: batched == per-sequence across random traces
 # ---------------------------------------------------------------------------
