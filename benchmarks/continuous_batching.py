@@ -181,61 +181,75 @@ def fused_rounds_study():
     sequence's KV) — `cm.decode_round_time` on both sides.  Gate: >= 2x at
     8 active sequences.
 
-    Measured (reduced gpt2, real engine): same trace through
-    `run_continuous` with `fused_rounds` on/off — token-identical outputs,
-    and `EngineReport.pass_trace` shows O(1) passes per decode round in the
-    active count (1 fused pass where the oracle path runs one per sequence).
+    Measured (reduced gpt2 + reduced bloom, real engine): same trace through
+    `run_continuous` with `fused_rounds` on (the default) vs off —
+    token-identical outputs, and `EngineReport.pass_trace` shows O(1) passes
+    per decode round in the active count (1 fused pass where the oracle path
+    runs one per sequence).  bloom exercises the ALiBi batched-bias path
+    that used to be excluded from the fused gate.
     """
-    cfg = PAPER_ARCHS["opt-66b"]
-    ctx = 1500
-    ratio8 = 0.0
-    for n in (1, 2, 4, 8, 16):
-        per = cm.decode_round_time(cfg, n, ctx, cfg.num_layers, 8, fused=False)
-        fus = cm.decode_round_time(cfg, n, ctx, cfg.num_layers, 8, fused=True)
-        emit(f"fused_modeled_round_ms_perseq_n{n}", 0.0, f"{per * 1e3:.2f}")
-        emit(f"fused_modeled_round_ms_fused_n{n}", 0.0, f"{fus * 1e3:.2f}")
-        emit(f"fused_modeled_round_speedup_n{n}", 0.0, f"{per / fus:.2f}x")
-        if n == 8:
-            ratio8 = per / fus
+    ratios8 = {}
+    for arch in ("opt-66b", "bloom-176b"):
+        cfg = PAPER_ARCHS[arch]
+        ctx = 1500
+        tag = arch.split("-")[0]
+        for n in (1, 2, 4, 8, 16):
+            per = cm.decode_round_time(cfg, n, ctx, cfg.num_layers, 8,
+                                       fused=False)
+            fus = cm.decode_round_time(cfg, n, ctx, cfg.num_layers, 8,
+                                       fused=True)
+            emit(f"fused_modeled_round_ms_perseq_{tag}_n{n}", 0.0,
+                 f"{per * 1e3:.2f}")
+            emit(f"fused_modeled_round_ms_fused_{tag}_n{n}", 0.0,
+                 f"{fus * 1e3:.2f}")
+            emit(f"fused_modeled_round_speedup_{tag}_n{n}", 0.0,
+                 f"{per / fus:.2f}x")
+            if n == 8:
+                ratios8[arch] = per / fus
 
     # --- measured: 8 sequences decoding together, passes per round --------
     import jax
     from repro.models import build_model
     from repro.serving import Request, ServingEngine
 
-    rcfg = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
-                               dtype="float32", num_layers=4)
-    model = build_model(rcfg)
-    params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, rcfg.vocab_size, (8,)).astype(np.int32)
-               for _ in range(8)]
+    for arch, layers, nseq in (("gpt2-1.5b", 4, 8), ("bloom-176b", 2, 6)):
+        rcfg = dataclasses.replace(PAPER_ARCHS[arch].reduced(),
+                                   dtype="float32", num_layers=layers)
+        model = build_model(rcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, rcfg.vocab_size, (8,)).astype(np.int32)
+                   for _ in range(nseq)]
 
-    def mkreqs():
-        return [Request(rid=i, prompt=prompts[i].copy(), max_new=6)
-                for i in range(8)]
+        def mkreqs():
+            return [Request(rid=i, prompt=prompts[i].copy(), max_new=6)
+                    for i in range(nseq)]
 
-    kw = dict(paged=True, kv_pool_blocks=256)
-    rb = ServingEngine(rcfg, model, params, 2, **kw).run_continuous(
-        mkreqs(), max_active=8)
-    rf = ServingEngine(rcfg, model, params, 2, fused_rounds=True,
-                       **kw).run_continuous(mkreqs(), max_active=8)
-    assert rf.tokens == rb.tokens, "fused rounds changed the tokens"
-    # steady rounds (no admissions, no in-flight prefills, full batch of 8):
-    # the oracle path runs 8 passes, the fused path exactly ONE
-    steady = [(b, p) for b, p in zip(rf.batch_trace[1:], rf.pass_trace[1:])
-              if b == 8]
-    steady_base = [(b, p) for b, p
-                   in zip(rb.batch_trace[1:], rb.pass_trace[1:]) if b == 8]
-    assert steady and all(p == 1 for _, p in steady), \
-        f"fused 8-active rounds must be ONE pass: {rf.pass_trace}"
-    assert all(p == 8 for _, p in steady_base), rb.pass_trace
-    emit("fused_measured_passes_8active_perseq", 0.0,
-         str(steady_base[0][1]))
-    emit("fused_measured_passes_8active_fused", 0.0, str(steady[0][1]))
-    emit("fused_measured_total_passes", 0.0,
-         f"{sum(rf.pass_trace)} vs {sum(rb.pass_trace)} per-seq")
-    return ratio8
+        tag = arch.split("-")[0]
+        kw = dict(paged=True, kv_pool_blocks=256)
+        rb = ServingEngine(rcfg, model, params, 2, fused_rounds=False,
+                           **kw).run_continuous(mkreqs(), max_active=nseq)
+        rf = ServingEngine(rcfg, model, params, 2, **kw).run_continuous(
+            mkreqs(), max_active=nseq)
+        assert rf.tokens == rb.tokens, \
+            f"fused rounds changed the tokens ({arch})"
+        # steady rounds (no admissions, no in-flight prefills, full batch):
+        # the oracle path runs one pass per sequence, the fused path ONE
+        steady = [p for b, p in zip(rf.batch_trace[1:], rf.pass_trace[1:])
+                  if b == nseq]
+        steady_base = [p for b, p
+                       in zip(rb.batch_trace[1:], rb.pass_trace[1:])
+                       if b == nseq]
+        assert steady and all(p == 1 for p in steady), \
+            f"fused {nseq}-active rounds must be ONE pass: {rf.pass_trace}"
+        assert all(p == nseq for p in steady_base), rb.pass_trace
+        emit(f"fused_measured_passes_{nseq}active_perseq_{tag}", 0.0,
+             str(steady_base[0]))
+        emit(f"fused_measured_passes_{nseq}active_fused_{tag}", 0.0,
+             str(steady[0]))
+        emit(f"fused_measured_total_passes_{tag}", 0.0,
+             f"{sum(rf.pass_trace)} vs {sum(rb.pass_trace)} per-seq")
+    return ratios8
 
 
 def run() -> None:
@@ -243,9 +257,10 @@ def run() -> None:
     assert ratio >= 1.3, f"continuous batching modeled speedup {ratio:.2f} < 1.3"
     assert mem_ratio < 1.0
     measured_study()
-    ratio8 = fused_rounds_study()
-    assert ratio8 >= 2.0, \
-        f"fused round latency speedup {ratio8:.2f}x < 2x at 8 active"
+    ratios8 = fused_rounds_study()
+    for arch, r in ratios8.items():
+        assert r >= 2.0, \
+            f"fused round latency speedup {r:.2f}x < 2x at 8 active ({arch})"
 
 
 if __name__ == "__main__":

@@ -63,9 +63,14 @@ class ArchConfig:
     # Fused batched rounds (continuous batching): ONE pipeline pass decodes
     # every live sequence per round (ragged per-sequence lengths over
     # per-sequence block tables) and one pass packs all in-flight prefill
-    # chunks, instead of one pass per sequence per round.  Off = the
-    # per-sequence oracle path, which fused mode is property-tested against.
-    fused_rounds: bool = False
+    # chunks, instead of one pass per sequence per round.  ON by default —
+    # the batched mask/bias path is exact for every dense/moe attention
+    # variant (full-causal, ALiBi, sliding-window+meta); unsupported
+    # families (ssm/hybrid/encdec/vlm) fall back per-sequence via the
+    # cluster's `fused_ok` gate.  Set False (or pass fused_rounds=False to
+    # the engine) to force the per-sequence oracle path, which fused mode
+    # is property-tested against.
+    fused_rounds: bool = True
     # --- misc ---
     dtype: str = "bfloat16"
     max_seq_len: int = 524288

@@ -33,6 +33,23 @@ def _stage_ranges(num_layers: int, depth: int) -> List[Tuple[int, int]]:
     return [(int(s[0]), int(s[-1]) + 1) for s in splits]
 
 
+def fused_supported(cfg: ArchConfig) -> bool:
+    """Whether the batched fused-round path is EXACT for this config — the
+    narrow correctness gate behind `DejaVuCluster.fused_ok`.
+
+    The batched mask/bias path carries full-causal, ALiBi, and
+    sliding-window(+meta attention-sink) attention per sequence, so every
+    dense/moe config qualifies.  What it cannot express is per-sequence
+    state outside the KV cache: ssm/hybrid recurrent state, encdec
+    cross-attention, and vlm patch slots (`num_patches` shifts every token's
+    cache position by a per-request prefix the batched gather does not
+    carry) — those families fall back to the per-sequence oracle path
+    cleanly, fused knob or not.  Mirrored by
+    `costmodel.fused_round_supported` so planner round terms degrade the
+    same way."""
+    return cfg.family in ("dense", "moe") and not cfg.num_patches
+
+
 class DejaVuCluster:
     def __init__(self, cfg: ArchConfig, model, params, n_workers: int, *,
                  mode: str = "colocated", dp_split: Optional[Tuple[int, int]] = None,
@@ -218,19 +235,12 @@ class DejaVuCluster:
     # ------------------------------------------------------------------
     @property
     def fused_ok(self) -> bool:
-        """Fused batched rounds are exact only where the chunked-decode path
-        is (full-causal dense/moe, no patch/meta context slots), and the
-        batched mask path carries no ALiBi bias — everything else falls back
-        to the per-sequence oracle path even with the knob on.  Sliding
-        windows and meta tokens are excluded EXPLICITLY (not just via the
-        family list): a dense config carrying either would otherwise pass
-        the gate and decode wrong tokens silently."""
-        return (self.fused_rounds and self.paged
-                and self.cfg.family in ("dense", "moe")
-                and not self.cfg.context_overhead
-                and self.cfg.sliding_window == 0
-                and self.cfg.num_meta_tokens == 0
-                and self.cfg.pos_emb != "alibi")
+        """Fused batched rounds run whenever the knob is on, the cluster is
+        paged, and `fused_supported` says the batched mask/bias path is
+        exact for the family — ALiBi (bloom) and sliding-window+meta (hymba
+        -style dense mixes) included.  Unsupported families (ssm / hybrid /
+        encdec / vlm) fall back to the per-sequence oracle path cleanly."""
+        return self.fused_rounds and self.paged and fused_supported(self.cfg)
 
     def can_admit(self, prompt_len: int, n_active: int,
                   token_ids: Optional[np.ndarray] = None) -> bool:
@@ -280,10 +290,12 @@ class DejaVuCluster:
 
     def _chunkable(self) -> bool:
         """Chunked prefill is exact only where the decode path is (same
-        restriction as prefix adoption): full-causal attention families."""
+        restriction as prefix adoption): dense/moe attention — the chunk
+        mask carries windows, meta sinks, and ALiBi per sequence; only vlm
+        patch slots (a per-request position prefix) are out."""
         return (self.prefill_chunk_tokens > 0
                 and self.cfg.family in ("dense", "moe")
-                and not self.cfg.context_overhead)
+                and not self.cfg.num_patches)
 
     def prefill_seq_begin(self, rid: int, prompt: np.ndarray,
                           max_new: int) -> None:
@@ -419,7 +431,7 @@ class DejaVuCluster:
         serve from cache.  Capped so at least one suffix token runs through
         compute (the prefill logits must come from somewhere)."""
         if not self.tiered or self.cfg.family not in ("dense", "moe") \
-                or self.cfg.context_overhead:
+                or self.cfg.num_patches:
             return []
         bs = self.kv_block_size
         hashes = BlockPool.chain_hashes(token_ids, bs)

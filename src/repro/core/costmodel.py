@@ -155,6 +155,15 @@ def prefill_bubble_frac(cfg: ArchConfig, wl: WorkloadSpec, chunk: int,
 # fused batched rounds (continuous batching: ONE pipeline pass per round)
 # ---------------------------------------------------------------------------
 
+def fused_round_supported(cfg: ArchConfig) -> bool:
+    """Whether the engine's fused batched round path serves this config —
+    the cost-model mirror of the cluster gate (`cluster.fused_supported`):
+    every dense/moe attention variant (full-causal, ALiBi, sliding-window
+    +meta) fuses; ssm/hybrid/encdec recurrence and vlm patch slots run
+    per-sequence."""
+    return cfg.family in ("dense", "moe") and not cfg.num_patches
+
+
 def decode_round_time(cfg: ArchConfig, n_active: int, ctx: int,
                       n_layers: int, chips: int,
                       hw: HardwareModel = DEFAULT_HW, beff: float = 0.7,
@@ -169,7 +178,12 @@ def decode_round_time(cfg: ArchConfig, n_active: int, ctx: int,
     full stage weights and paying its own dispatch latency — exactly the
     O(n_active) round the fused refactor removes.  Both sides are built from
     the SAME `stage_token_time` term, so their ratio isolates the
-    weight-re-read + dispatch overhead."""
+    weight-re-read + dispatch overhead.
+
+    `fused=True` degrades to the per-sequence time for families the engine
+    cannot fuse (`fused_round_supported`), so planner round terms reflect
+    the path the engine will actually take."""
+    fused = fused and fused_round_supported(cfg)
     wl1 = WorkloadSpec(prompt_len=ctx, new_tokens=1, microbatch=1)
     one = stage_token_time(cfg, wl1, n_layers, chips, ctx, hw, beff)
     if not fused:

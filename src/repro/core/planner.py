@@ -65,7 +65,9 @@ class Plan:
     bubble_frac: float = 0.0
     # continuous-batching round time at `microbatch` live sequences: one pass
     # per sequence (oracle path) vs ONE fused batched pass per round — both
-    # derived from the same stage_token_time term (cm.decode_round_time)
+    # derived from the same stage_token_time term (cm.decode_round_time).
+    # For families the engine cannot fuse (cm.fused_round_supported) the
+    # fused term equals the per-seq term, so fused_round_speedup reads 1.0
     round_time_perseq_s: float = 0.0
     round_time_fused_s: float = 0.0
     note: str = ""

@@ -128,9 +128,11 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     return out.reshape(b, hq, d)
 
 
-def _batched_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                           m_ref, l_ref, acc_ref, *, scale, block_k):
+def _batched_decode_kernel(len_ref, ws_ref, slope_ref, q_ref, k_ref, v_ref,
+                           o_ref, m_ref, l_ref, acc_ref, *, scale, block_k,
+                           num_meta, use_bias):
     bi = pl.program_id(0)
+    h = pl.program_id(1)
     ik = pl.program_id(2)
 
     @pl.when(ik == 0)
@@ -148,7 +150,16 @@ def _batched_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     # `decode_attention`)
     g = s.shape[0]
     slot = jax.lax.broadcasted_iota(jnp.int32, (g, block_k), 1)
-    valid = ik * block_k + slot < len_ref[bi]
+    abs_pos = ik * block_k + slot                        # [G, bk]
+    if use_bias:
+        # ALiBi: the query sits at position len-1; masked slots get NEG_INF
+        # below, so the bias there is don't-care
+        dist = (len_ref[bi] - 1) - abs_pos
+        s = s - slope_ref[h][:, None] * jnp.maximum(dist, 0).astype(jnp.float32)
+    valid = abs_pos < len_ref[bi]
+    # sliding window: only slots at/after this sequence's window start attend
+    # (start 0 = windowless no-op), except the always-visible meta sinks
+    valid &= (abs_pos >= ws_ref[bi]) | (abs_pos < num_meta)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -164,8 +175,9 @@ def _batched_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0, :, :] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def batched_decode_attention(q, k, v, lengths, *, block_k: int = 512,
+@functools.partial(jax.jit, static_argnames=("block_k", "num_meta", "interpret"))
+def batched_decode_attention(q, k, v, lengths, win_starts=None, slopes=None, *,
+                             block_k: int = 512, num_meta: int = 0,
                              interpret: bool = True):
     """Fused-round decode attention: every sequence of the batch advances one
     step in ONE kernel launch, each masked to its OWN live length.
@@ -174,10 +186,18 @@ def batched_decode_attention(q, k, v, lengths, *, block_k: int = 512,
     the densified block-table gather of the fused live path); lengths: [B]
     int32 live token counts INCLUDING the new token -> [B,Hq,D].
 
+    win_starts: optional [B] int32 per-sequence sliding-window start (the
+    first non-meta slot allowed to attend; 0 = full attention for that
+    sequence — e.g. a full-attn layer of a window mix).  Slots below the
+    static `num_meta` are always-visible attention sinks.  slopes: optional
+    [Hq] f32 ALiBi slopes; the query sits at position lengths[b]-1, so the
+    bias at slot j is -slope * max(lengths[b]-1-j, 0), matching the XLA
+    path's `alibi_bias`.
+
     This is `decode_attention` with the validity mask made per-sequence
     (ragged lengths) instead of one shared [S] vector, so one launch serves
-    the whole fused round.  Lengths ride scalar prefetch like the paged
-    kernel's block tables.
+    the whole fused round.  Lengths, window starts, and slopes ride scalar
+    prefetch like the paged kernel's block tables.
     """
     b, hq, d = q.shape
     _, s, hkv, _ = k.shape
@@ -189,16 +209,24 @@ def batched_decode_attention(q, k, v, lengths, *, block_k: int = 512,
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
     qg = q.reshape(b, hkv, g, d)
     grid = (b, hkv, (s + pk) // bk)
+    use_bias = slopes is not None
+    if win_starts is None:
+        win_starts = jnp.zeros((b,), jnp.int32)
+    slopes_hg = (jnp.asarray(slopes, jnp.float32).reshape(hkv, g)
+                 if use_bias else jnp.zeros((hkv, g), jnp.float32))
 
-    q_spec = pl.BlockSpec((1, 1, g, d), lambda bi, h, ik, ln: (bi, h, 0, 0))
-    kv_spec = pl.BlockSpec((1, bk, 1, d), lambda bi, h, ik, ln: (bi, ik, h, 0))
+    q_spec = pl.BlockSpec((1, 1, g, d),
+                          lambda bi, h, ik, ln, ws, sl: (bi, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, bk, 1, d),
+                           lambda bi, h, ik, ln, ws, sl: (bi, ik, h, 0))
     out = pl.pallas_call(
-        functools.partial(_batched_decode_kernel, scale=d ** -0.5, block_k=bk),
+        functools.partial(_batched_decode_kernel, scale=d ** -0.5, block_k=bk,
+                          num_meta=num_meta, use_bias=use_bias),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1, grid=grid,
+            num_scalar_prefetch=3, grid=grid,
             in_specs=[q_spec, kv_spec, kv_spec],
             out_specs=pl.BlockSpec((1, 1, g, d),
-                                   lambda bi, h, ik, ln: (bi, h, 0, 0)),
+                                   lambda bi, h, ik, ln, ws, sl: (bi, h, 0, 0)),
             scratch_shapes=[
                 pltpu.VMEM((g,), jnp.float32),
                 pltpu.VMEM((g,), jnp.float32),
@@ -206,7 +234,8 @@ def batched_decode_attention(q, k, v, lengths, *, block_k: int = 512,
             ]),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(lengths, jnp.int32), qg, k, v)
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(win_starts, jnp.int32),
+      slopes_hg, qg, k, v)
     return out.reshape(b, hq, d)
 
 

@@ -47,10 +47,22 @@ def decode_attention_auto(q, k_cache, v_cache, mask):
     return out[:, None]
 
 
-def batched_decode_attention_auto(q, k_cache, v_cache, lengths):
+def batched_decode_attention_auto(q, k_cache, v_cache, lengths, *,
+                                  window=0, num_meta: int = 0, alibi=None):
     """Fused-round decode attention entry point: one launch, B sequences,
-    ragged per-sequence lengths.  q: [B,Hq,D]; k/v: [B,S,Hkv,D]."""
+    ragged per-sequence lengths.  q: [B,Hq,D]; k/v: [B,S,Hkv,D].
+
+    `window` (static or traced per-layer int32; 0 = full attention) becomes
+    per-sequence window starts max(lengths - window, 0); `alibi` [Hq] slopes
+    ride scalar prefetch into the kernel's additive bias."""
+    win_starts = None
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window, jnp.int32)
+        win_starts = jnp.where(w > 0, jnp.maximum(lengths - w, 0), 0)
+    slopes = None if alibi is None else jnp.asarray(alibi, jnp.float32)
     return batched_decode_attention(q, k_cache, v_cache, lengths,
+                                    win_starts, slopes,
+                                    num_meta=int(num_meta),
                                     interpret=INTERPRET)
 
 

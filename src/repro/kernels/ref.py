@@ -61,16 +61,29 @@ def decode_attention_ref(q, k, v, kv_valid):
 # batched decode attention (fused rounds: ragged per-sequence lengths)
 # ---------------------------------------------------------------------------
 
-def batched_decode_attention_ref(q, k, v, lengths):
+def batched_decode_attention_ref(q, k, v, lengths, win_starts=None,
+                                 slopes=None, *, num_meta: int = 0):
     """q: [B,Hq,D]; k/v: [B,S,Hkv,D]; lengths: [B] int32 (live tokens per
     sequence, incl. the new one) -> [B,Hq,D].  `decode_attention_ref` with a
-    per-sequence validity mask — the dense oracle of the fused-round pass."""
+    per-sequence validity mask — the dense oracle of the fused-round pass.
+
+    win_starts: optional [B] int32 first non-meta slot each sequence may
+    attend (0 = full attention); slots < num_meta are always-visible sinks.
+    slopes: optional [Hq] f32 ALiBi slopes (query at position lengths[b]-1)."""
     b, hq, d = q.shape
     _, s, hkv, _ = k.shape
     g = hq // hkv
-    valid = jnp.arange(s)[None, :] < lengths[:, None]              # [B,S]
+    pos = jnp.arange(s)[None, :]                                   # [1,S]
+    valid = pos < lengths[:, None]                                 # [B,S]
+    if win_starts is not None:
+        valid &= (pos >= win_starts[:, None]) | (pos < num_meta)
     qg = q.reshape(b, hkv, g, d)
     scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k).astype(jnp.float32) * (d ** -0.5)
+    if slopes is not None:
+        dist = ((lengths[:, None] - 1) - pos).astype(jnp.float32)  # [B,S]
+        scores = scores - (slopes.reshape(hkv, g).astype(jnp.float32)
+                           [None, :, :, None]
+                           * jnp.maximum(dist, 0.0)[:, None, None, :])
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs, v)

@@ -59,16 +59,20 @@ def build_mask(q_pos, kv_pos, *, causal: bool, window: int = 0, num_meta: int = 
     q_pos: [Sq] or [B,Sq]; kv_pos: [Skv] or [B,Skv] int32 (−1 = empty slot).
     Meta tokens occupy positions [0, num_meta) and are always visible.
     Window (if >0) permits kv within the last `window` positions of q.
+    `window` may be a traced int32 scalar (the per-layer window threaded
+    through a `lax.scan` for full-attn-layer mixes); a traced 0 disables the
+    window at runtime, a static 0 skips the branch entirely.
     """
     qp = q_pos[..., :, None].astype(jnp.int32)
     kp = kv_pos[..., None, :].astype(jnp.int32)
     mask = kp >= 0
     if causal:
         mask &= kp <= qp
-    if window > 0:
-        in_window = kp > qp - window
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window, jnp.int32)
+        in_window = kp > qp - w
         is_meta = kp < num_meta
-        mask &= in_window | is_meta
+        mask &= jnp.where(w > 0, in_window | is_meta, True)
     return mask
 
 
@@ -79,7 +83,8 @@ def build_mask(q_pos, kv_pos, *, causal: bool, window: int = 0, num_meta: int = 
 def attend(q, k, v, mask=None, bias=None, backend: str = "xla"):
     """q: [B,Sq,Hq,Dh], k/v: [B,Skv,Hkv,Dh], mask: [.., Sq,Skv] bool.
 
-    GQA: Hq = G * Hkv.  Softmax in f32.  bias: [Hq,Sq,Skv] f32 additive
+    GQA: Hq = G * Hkv.  Softmax in f32.  bias: [Hq,Sq,Skv] (shared) or
+    [B,Hq,Sq,Skv] (per-sequence, the fused batched round) f32 additive
     (e.g. ALiBi), added to scores before masking.
     """
     if backend == "pallas":
@@ -92,7 +97,10 @@ def attend(q, k, v, mask=None, bias=None, backend: str = "xla"):
     scale = dh ** -0.5
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
     if bias is not None:
-        scores = scores + bias.reshape(hkv, g, *bias.shape[1:])[None]
+        if bias.ndim == 4:
+            scores = scores + bias.reshape(b, hkv, g, *bias.shape[2:])
+        else:
+            scores = scores + bias.reshape(hkv, g, *bias.shape[1:])[None]
     if mask is not None:
         m = mask[..., None, None, :, :] if mask.ndim == 2 else mask[:, None, None]
         scores = jnp.where(m, scores, NEG_INF)
@@ -102,9 +110,16 @@ def attend(q, k, v, mask=None, bias=None, backend: str = "xla"):
 
 
 def alibi_bias(slopes, q_pos, kv_pos):
-    """ALiBi additive bias [Hq,Sq,Skv] from absolute positions."""
-    dist = (q_pos[:, None] - kv_pos[None, :]).astype(jnp.float32)
-    return -slopes[:, None, None] * jnp.maximum(dist, 0.0)
+    """ALiBi additive bias from absolute positions.
+
+    q_pos [Sq], kv_pos [Skv] -> [Hq,Sq,Skv]; batched (per-sequence
+    positions, the fused round) q_pos [B,Sq], kv_pos [B,Skv]
+    -> [B,Hq,Sq,Skv].  Same formula either way."""
+    dist = (q_pos[..., :, None] - kv_pos[..., None, :]).astype(jnp.float32)
+    dist = jnp.maximum(dist, 0.0)
+    if dist.ndim == 2:
+        return -slopes[:, None, None] * dist
+    return -slopes[None, :, None, None] * dist[:, None]
 
 
 def attend_blocked(q, k, v, q_pos, kv_pos, *, causal: bool = True,
@@ -153,9 +168,12 @@ def attend_blocked(q, k, v, q_pos, kv_pos, *, causal: bool = True,
                 valid = valid[None, :] & (kpb[None, :] <= qposb[:, None])
             else:
                 valid = jnp.broadcast_to(valid[None, :], (bq, bk))
-            if window > 0:
-                in_w = kpb[None, :] > qposb[:, None] - window
-                valid = valid & (in_w | (kpb < num_meta)[None, :])
+            if not (isinstance(window, int) and window == 0):
+                w = jnp.asarray(window, jnp.int32)
+                in_w = kpb[None, :] > qposb[:, None] - w
+                valid = valid & jnp.where(w > 0,
+                                          in_w | (kpb < num_meta)[None, :],
+                                          True)
             s = jnp.where(valid[None, None, None], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             alpha = jnp.exp(m - m_new)
@@ -231,7 +249,7 @@ def attention_decode(x, p, cfg, k_cache, v_cache, kv_positions, pos, *,
         return out_proj(o, p), k_cache, v_cache
     mask = build_mask(q_pos, kv_positions, causal=True, window=window, num_meta=num_meta)
     bias = alibi_bias(alibi, q_pos, jnp.maximum(kv_positions, 0)) if alibi is not None else None
-    if backend == "pallas" and c == 1:
+    if backend == "pallas" and c == 1 and bias is None:
         from repro.kernels import ops as kops
         o = kops.decode_attention_auto(q, k_cache, v_cache, mask)
     else:
@@ -240,7 +258,8 @@ def attention_decode(x, p, cfg, k_cache, v_cache, kv_positions, pos, *,
 
 
 def attention_decode_batch(x, p, cfg, k_cache, v_cache, kv_positions, pos,
-                           q_lens=None, *, rope: bool = True,
+                           q_lens=None, *, window: int = 0, num_meta: int = 0,
+                           rope: bool = True, alibi=None,
                            backend: str = "xla"):
     """Fused-round decode / chunk-pack attention: B sequences advance in ONE
     pass at per-sequence positions (vs `attention_decode`'s shared scalar
@@ -252,8 +271,12 @@ def attention_decode_batch(x, p, cfg, k_cache, v_cache, kv_positions, pos,
     padding for ragged chunk sets).  k/v_cache: [B,S,Hkv,Dh] (each sequence's
     pool pages densified and padded to a common S); kv_positions: [B,S] int32
     with −1 marking slots past each sequence's own live length; pos: [B]
-    int32.  Restricted to full-causal / no-ALiBi families (the cluster's
-    `fused_ok` gate).  Returns (out, k_cache, v_cache).
+    int32.  The batched mask/bias carry the same attention variants the
+    per-sequence path does — sliding window (+ meta attention-sink tokens;
+    `window` may be a traced per-layer scalar) and ALiBi — so the cluster's
+    `fused_ok` gate only excludes families with state the mask cannot
+    express (ssm/hybrid/encdec recurrence, vlm patch slots).  Returns
+    (out, k_cache, v_cache).
     """
     b, c, _ = x.shape
     q, k_new, v_new = qkv_proj(x, p, cfg)
@@ -289,10 +312,15 @@ def attention_decode_batch(x, p, cfg, k_cache, v_cache, kv_positions, pos,
     if backend == "pallas" and c == 1:
         from repro.kernels import ops as kops
         o = kops.batched_decode_attention_auto(q[:, 0], k_cache, v_cache,
-                                               pos + 1)[:, None]
+                                               pos + 1, window=window,
+                                               num_meta=num_meta,
+                                               alibi=alibi)[:, None]
     else:
-        mask = build_mask(q_pos, kv_positions, causal=True)
-        o = attend(q, k_cache, v_cache, mask=mask, backend="xla")
+        mask = build_mask(q_pos, kv_positions, causal=True, window=window,
+                          num_meta=num_meta)
+        bias = (alibi_bias(alibi, q_pos, jnp.maximum(kv_positions, 0))
+                if alibi is not None else None)
+        o = attend(q, k_cache, v_cache, mask=mask, bias=bias, backend="xla")
     return out_proj(o, p), k_cache, v_cache
 
 

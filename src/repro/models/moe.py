@@ -35,11 +35,20 @@ def capacity(num_tokens: int, cfg) -> int:
     return max(c, 1)
 
 
-def moe_apply(x, p, cfg, return_aux: bool = False):
-    """x: [T, d] flattened tokens -> [T, d] (+ aux load-balancing loss)."""
+def moe_apply(x, p, cfg, return_aux: bool = False, drop: bool = True):
+    """x: [T, d] flattened tokens -> [T, d] (+ aux load-balancing loss).
+
+    ``drop=False`` dispatches with capacity T (provably lossless: a token's
+    top-k experts are distinct, so no expert ever receives more than T
+    entries).  Inference paths use it — capacity dropping is a TRAINING
+    throughput device, and because `capacity(T)` depends on the pass's token
+    count it couples a token's output to the batch composition, which would
+    break the serving engine's token-identity invariant (fused batched
+    rounds and packed prefill chunk-sets place the same token in passes of
+    different sizes than the per-sequence oracle path)."""
     t, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
-    c = capacity(t, cfg)
+    c = capacity(t, cfg) if drop else t
     act = activation_fn(cfg.activation)
 
     logits = (x.astype(jnp.float32) @ p["router"])          # [T, E]

@@ -29,6 +29,13 @@ class DecoderLM:
         self.remat = remat
         self._alibi = (jnp.asarray(alibi_slopes(cfg.num_heads))
                        if cfg.pos_emb == "alibi" else None)
+        # per-layer sliding window (0 = full attention), threaded through
+        # every layer scan as xs so full-attn-layer mixes stay O(1)-HLO;
+        # all-zeros for windowless configs (`_layer` then keeps the static
+        # no-window mask path, and the array is dead-code-eliminated)
+        self._layer_window = jnp.asarray(
+            [0 if i in cfg.full_attn_layers else cfg.sliding_window
+             for i in range(cfg.num_layers)], jnp.int32)
 
     # ------------------------------------------------------------------
     def init(self, key) -> Dict:
@@ -78,25 +85,36 @@ class DecoderLM:
         return logical_constraint(logits, "batch", None, "vocab")
 
     def _layer(self, x, lp, *, mode, positions=None, kc=None, vc=None,
-               kv_positions=None, pos=None, q_lens=None, collect_aux=False):
+               kv_positions=None, pos=None, q_lens=None, window=0,
+               collect_aux=False):
         cfg = self.cfg
+        if cfg.sliding_window == 0:
+            window = 0        # static: windowless configs keep the plain mask
+        num_meta = cfg.num_meta_tokens
         x = logical_constraint(x, "batch", "seq", None)   # residual stream
         h = norm_apply(cfg.norm, x, lp["ln1"])
         rope = cfg.pos_emb == "rope"
         if mode == "prefill":
             a, k, v = attn.attention_prefill(h, lp["attn"], cfg, positions,
+                                             window=window, num_meta=num_meta,
                                              rope=rope, alibi=self._alibi,
                                              backend=self.backend)
             extra = (k, v)
         elif mode == "decode_batch":
             a, kc, vc = attn.attention_decode_batch(h, lp["attn"], cfg, kc, vc,
                                                     kv_positions, pos,
-                                                    q_lens=q_lens, rope=rope,
+                                                    q_lens=q_lens,
+                                                    window=window,
+                                                    num_meta=num_meta,
+                                                    rope=rope,
+                                                    alibi=self._alibi,
                                                     backend=self.backend)
             extra = (kc, vc)
         else:
             a, kc, vc = attn.attention_decode(h, lp["attn"], cfg, kc, vc,
-                                              kv_positions, pos, rope=rope,
+                                              kv_positions, pos,
+                                              window=window, num_meta=num_meta,
+                                              rope=rope,
                                               alibi=self._alibi, backend=self.backend)
             extra = (kc, vc)
         x = x + a
@@ -106,9 +124,13 @@ class DecoderLM:
             b, s, d = h.shape
             flat = h.reshape(b * s, d)
             if collect_aux:
+                # training: capacity-bounded dispatch + load-balancing aux
                 out, aux = moe_apply(flat, lp["moe"], cfg, return_aux=True)
             else:
-                out = moe_apply(flat, lp["moe"], cfg)
+                # inference: lossless dispatch — capacity depends on the
+                # pass's token count, so dropping would make a token's
+                # output vary with how the scheduler packed the pass
+                out = moe_apply(flat, lp["moe"], cfg, drop=False)
             out = out.reshape(b, s, d)
         else:
             out = mlp_apply(h, lp["mlp"], cfg)
@@ -122,14 +144,15 @@ class DecoderLM:
         s_total = x.shape[1]
         positions = jnp.arange(s_total, dtype=jnp.int32)
 
-        def body(x, lp):
+        def body(x, xs):
+            lp, w = xs
             x, _, aux = self._layer(x, lp, mode="prefill", positions=positions,
-                                    collect_aux=cfg.is_moe)
+                                    window=w, collect_aux=cfg.is_moe)
             return x, aux
 
         if self.remat:
             body = jax.checkpoint(body)
-        x, auxs = jax.lax.scan(body, x, params["layers"])
+        x, auxs = jax.lax.scan(body, x, (params["layers"], self._layer_window))
         x = norm_apply(cfg.norm, x, params["final_norm"])
         if cfg.family == "vlm":  # drop patch positions before the LM head
             x = x[:, cfg.num_patches:]
@@ -149,11 +172,14 @@ class DecoderLM:
         max_len = max(max_len or s_total, s_total)  # total context incl. patches
         positions = jnp.arange(s_total, dtype=jnp.int32)
 
-        def body(x, lp):
-            x, (k, v), _ = self._layer(x, lp, mode="prefill", positions=positions)
+        def body(x, xs):
+            lp, w = xs
+            x, (k, v), _ = self._layer(x, lp, mode="prefill",
+                                       positions=positions, window=w)
             return x, (k, v)
 
-        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                             self._layer_window))
         x = norm_apply(cfg.norm, x, params["final_norm"])
         logits = self._unembed(params, x[:, -1:, :])[:, 0]
         hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -171,7 +197,8 @@ class DecoderLM:
     # ------------------------------------------------------------------
 
     def slice_params(self, params, lo: int, hi: int, *, first: bool, last: bool):
-        sp = {"layers": jax.tree.map(lambda a: a[lo:hi], params["layers"])}
+        sp = {"layers": jax.tree.map(lambda a: a[lo:hi], params["layers"]),
+              "layer_window": self._layer_window[lo:hi]}
         if first:
             for k in ("embed", "pos_table", "patch_proj"):
                 if k in params:
@@ -193,11 +220,14 @@ class DecoderLM:
             x = self._embed(sp, tokens, patch_embeds)
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
 
-        def body(x, lp):
-            x, (k, v), _ = self._layer(x, lp, mode="prefill", positions=positions)
+        def body(x, xs):
+            lp, w = xs
+            x, (k, v), _ = self._layer(x, lp, mode="prefill",
+                                       positions=positions, window=w)
             return x, (k, v)
 
-        x, (ks, vs) = jax.lax.scan(body, x, sp["layers"])
+        x, (ks, vs) = jax.lax.scan(body, x, (sp["layers"],
+                                             sp["layer_window"]))
         if last:
             x = norm_apply(cfg.norm, x, sp["final_norm"])
             x = self._unembed(sp, x[:, -1:, :])[:, 0]
@@ -224,12 +254,14 @@ class DecoderLM:
         kv_positions = jnp.where(kv_positions < pos + c, kv_positions, -1)
 
         def body(x, xs):
-            lp, k1, v1 = xs
+            lp, k1, v1, w = xs
             x, (k1, v1), _ = self._layer(x, lp, mode="decode", kc=k1, vc=v1,
-                                         kv_positions=kv_positions, pos=pos)
+                                         kv_positions=kv_positions, pos=pos,
+                                         window=w)
             return x, (k1, v1)
 
-        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc,
+                                             sp["layer_window"]))
         if last:
             x = norm_apply(cfg.norm, x, sp["final_norm"])
             x = self._unembed(sp, x[:, -1:, :])[:, 0]
@@ -251,13 +283,14 @@ class DecoderLM:
         kv_positions = jnp.where(slots <= pos[:, None], slots, -1)   # [B,S]
 
         def body(x, xs):
-            lp, k1, v1 = xs
+            lp, k1, v1, w = xs
             x, (k1, v1), _ = self._layer(x, lp, mode="decode_batch", kc=k1,
                                          vc=v1, kv_positions=kv_positions,
-                                         pos=pos)
+                                         pos=pos, window=w)
             return x, (k1, v1)
 
-        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc,
+                                             sp["layer_window"]))
         if last:
             x = norm_apply(cfg.norm, x, sp["final_norm"])
             x = self._unembed(sp, x)[:, 0]
@@ -288,13 +321,14 @@ class DecoderLM:
         kv_positions = jnp.where(slots < (pos + q_lens)[:, None], slots, -1)
 
         def body(x, xs):
-            lp, k1, v1 = xs
+            lp, k1, v1, w = xs
             x, (k1, v1), _ = self._layer(x, lp, mode="decode_batch", kc=k1,
                                          vc=v1, kv_positions=kv_positions,
-                                         pos=pos, q_lens=q_lens)
+                                         pos=pos, q_lens=q_lens, window=w)
             return x, (k1, v1)
 
-        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc,
+                                             sp["layer_window"]))
         if last:
             x = norm_apply(cfg.norm, x, sp["final_norm"])
             # per-sequence final valid token (ragged chunks): row q_lens[b]-1
@@ -317,12 +351,14 @@ class DecoderLM:
         kv_positions = jnp.where(kv_positions <= pos, kv_positions, -1)
 
         def body(x, xs):
-            lp, k1, v1 = xs
+            lp, k1, v1, w = xs
             x, (k1, v1), _ = self._layer(x, lp, mode="decode", kc=k1, vc=v1,
-                                         kv_positions=kv_positions, pos=pos)
+                                         kv_positions=kv_positions, pos=pos,
+                                         window=w)
             return x, (k1, v1)
 
-        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc))
+        x, (kc, vc) = jax.lax.scan(body, x, (sp["layers"], kc, vc,
+                                             sp["layer_window"]))
         if last:
             x = norm_apply(cfg.norm, x, sp["final_norm"])
             x = self._unembed(sp, x)[:, 0]
@@ -342,13 +378,16 @@ class DecoderLM:
         kv_positions = jnp.where(kv_positions <= pos, kv_positions, -1)
 
         def body(x, xs):
-            lp, kc, vc = xs
+            lp, kc, vc, w = xs
             x, (kc, vc), _ = self._layer(x, lp, mode="decode", kc=kc, vc=vc,
-                                         kv_positions=kv_positions, pos=pos)
+                                         kv_positions=kv_positions, pos=pos,
+                                         window=w)
             return x, (kc, vc)
 
         x, (kcs, vcs) = jax.lax.scan(body, x, (params["layers"],
-                                               state["kv"]["k"], state["kv"]["v"]))
+                                               state["kv"]["k"],
+                                               state["kv"]["v"],
+                                               self._layer_window))
         x = norm_apply(cfg.norm, x, params["final_norm"])
         logits = self._unembed(params, x)[:, 0]
         return logits, {"kv": {"k": kcs, "v": vcs}}

@@ -189,12 +189,16 @@ class ServingEngine:
         decodes by at most one chunk instead of its whole length
         (`EngineReport.prefill_stall_trace` records the per-round stall).
 
-        With `fused_rounds` (and a config the cluster's `fused_ok` gate
-        accepts), the round's decodes run as ONE batched pipeline pass over
-        ragged per-sequence lengths and all in-flight chunk prefills pack
-        into one chunk-set pass — `EngineReport.pass_trace` records the
-        per-round pass count — with outputs token-identical to the
-        per-sequence oracle path (the knob off).
+        Fused rounds are the DEFAULT (`ArchConfig.fused_rounds=True`): for
+        every config the cluster's `fused_ok` gate accepts — all dense/moe
+        attention variants, ALiBi (bloom) and sliding-window+meta included —
+        the round's decodes run as ONE batched pipeline pass over ragged
+        per-sequence lengths and all in-flight chunk prefills pack into one
+        chunk-set pass — `EngineReport.pass_trace` records the per-round
+        pass count — with outputs token-identical to the per-sequence
+        oracle path.  Pass ``fused_rounds=False`` to the engine to force
+        the oracle path; unsupported families (ssm/hybrid/encdec/vlm) fall
+        back to it automatically.
         """
         cl = self.cluster
         assert cl.paged, "run_continuous requires ServingEngine(..., paged=True)"

@@ -1,0 +1,87 @@
+"""Registry-wide fused-round guard.
+
+`fused_rounds` defaults ON, so EVERY config in `repro.configs.registry`
+must either (a) pass the `fused_ok` gate and decode token-identically to
+the per-sequence oracle path, or (b) fail the gate and fall back cleanly
+(no crash, per-sequence pass shape).  This sweep pins the gate's verdict
+per family so a new config or a gate edit cannot silently fuse an
+unsupported architecture — or silently stop fusing a supported one.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, PAPER_ARCHS
+from repro.core import costmodel as cm
+from repro.core.cluster import fused_supported
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+ALL = {**ARCHS, **PAPER_ARCHS}
+# serving (cluster/worker stage APIs) is DecoderLM-only: dense + moe run the
+# real engine; the other families are gate-level assertions only
+SERVABLE = ("dense", "moe")
+
+
+def _reduced(cfg):
+    return dataclasses.replace(cfg.reduced(), dtype="float32")
+
+
+def _reqs(cfg, n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, (6 + 2 * (i % 2),)
+                            ).astype(np.int32) for i in range(n)]
+    return [Request(rid=i, prompt=p, max_new=3)
+            for i, p in enumerate(prompts)]
+
+
+def test_registry_gate_verdict_matches_family():
+    """The gate is a family property: dense/moe fuse, everything else
+    (ssm/hybrid recurrent state, encdec cross-attention, vlm patch
+    positions) must not — and the costmodel mirror must agree so planner
+    round terms degrade to the per-sequence time for unfusable configs."""
+    for name, cfg in ALL.items():
+        expect = cfg.family in SERVABLE and not cfg.num_patches
+        assert fused_supported(cfg) is expect, name
+        assert cm.fused_round_supported(cfg) is expect, name
+        if not expect:
+            ctx = 256
+            per = cm.decode_round_time(cfg, 8, ctx, cfg.num_layers, 8,
+                                       fused=False)
+            fus = cm.decode_round_time(cfg, 8, ctx, cfg.num_layers, 8,
+                                       fused=True)
+            assert fus == pytest.approx(per), name
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(n for n, c in ALL.items()
+                                        if c.family in SERVABLE
+                                        and not c.num_patches))
+def test_registry_fused_identity(name):
+    """Every servable registry config — RoPE, learned-position, ALiBi,
+    GQA/MHA, MoE — decodes token-identically fused vs per-sequence, and the
+    default engine really takes the fused path (fewer pipeline passes)."""
+    cfg = _reduced(ALL[name])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base = ServingEngine(cfg, model, params, 2, paged=True, kv_pool_blocks=64,
+                         fused_rounds=False).run_continuous(
+        _reqs(cfg), max_active=3)
+    eng = ServingEngine(cfg, model, params, 2, paged=True, kv_pool_blocks=64)
+    assert eng.cluster.fused_ok is True, name
+    rep = eng.run_continuous(_reqs(cfg), max_active=3)
+    assert rep.tokens == base.tokens, name
+    assert sum(rep.pass_trace) < sum(base.pass_trace), name
+
+
+def test_registry_vlm_falls_back_cleanly():
+    """phi-3-vision builds a DecoderLM but carries patch positions the
+    batched path does not model: with the default knob ON the engine's gate
+    must still choose the per-sequence path (identical pass shape)."""
+    cfg = _reduced(ALL["phi-3-vision-4.2b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, model, params, 2, paged=True, kv_pool_blocks=64)
+    assert eng.cluster.fused_ok is False

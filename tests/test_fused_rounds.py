@@ -1,7 +1,8 @@
 """Fused batched rounds: ONE pipeline pass per decode round.
 
-Token identity: with `fused_rounds` on, every trace must reproduce the
-per-sequence oracle path (the knob off) bit-for-bit — across prompt mixes,
+Token identity: with `fused_rounds` on (the DEFAULT), every trace must
+reproduce the per-sequence oracle path (`fused_rounds=False`) bit-for-bit
+— across prompt mixes,
 chunked prefill + prefix adoption, preemption, and mid-trace worker
 failures (greedy regeneration is deterministic, so any pass packing that
 computes the same per-sequence math yields the same tokens).  Shape: an
@@ -58,9 +59,9 @@ def _prompts(n, lens, seed=0):
 def test_fused_token_identity_mixed_trace():
     prompts = _prompts(6, [8, 12])
     mx = [6, 3, 7, 4, 3, 6]
-    base = engine(kv_pool_blocks=64).run_continuous(
+    base = engine(kv_pool_blocks=64, fused_rounds=False).run_continuous(
         mkreqs(prompts, mx), max_active=4)
-    fus = engine(kv_pool_blocks=64, fused_rounds=True).run_continuous(
+    fus = engine(kv_pool_blocks=64).run_continuous(
         mkreqs(prompts, mx), max_active=4)
     assert fus.tokens == base.tokens
     assert fus.batch_trace == base.batch_trace
@@ -72,9 +73,9 @@ def test_fused_8_active_round_is_one_pass():
     """Acceptance: an 8-active decode round = ONE batched pipeline pass
     (the oracle path runs 8), with token-identical output."""
     prompts = _prompts(8, [8])
-    base = engine(kv_pool_blocks=256).run_continuous(
+    base = engine(kv_pool_blocks=256, fused_rounds=False).run_continuous(
         mkreqs(prompts, 6), max_active=8)
-    fus = engine(kv_pool_blocks=256, fused_rounds=True).run_continuous(
+    fus = engine(kv_pool_blocks=256).run_continuous(
         mkreqs(prompts, 6), max_active=8)
     assert fus.tokens == base.tokens
     # rounds after the admission round hold 8 decoding sequences
@@ -91,9 +92,9 @@ def test_fused_chunked_prefill_packs_into_one_pass():
     chunk-set pass per round alongside the single decode pass."""
     prompts = _prompts(2, [8]) + _prompts(2, [40], seed=3)
     kw = dict(kv_pool_blocks=128, prefill_chunk_tokens=8)
-    base = engine(**kw).run_continuous(mkreqs(prompts, 6), max_active=4)
-    fus = engine(fused_rounds=True, **kw).run_continuous(
+    base = engine(fused_rounds=False, **kw).run_continuous(
         mkreqs(prompts, 6), max_active=4)
+    fus = engine(**kw).run_continuous(mkreqs(prompts, 6), max_active=4)
     assert fus.tokens == base.tokens
     # once admitted, a round is at most one chunk-set pass + one decode pass
     assert all(p <= 2 for p in fus.pass_trace[1:]), fus.pass_trace
@@ -105,10 +106,10 @@ def test_fused_chunked_prefill_packs_into_one_pass():
 def test_fused_failure_recovery_token_identical():
     prompts = _prompts(6, [8, 12])
     mx = [6, 3, 7, 4, 3, 6]
-    base = engine(kv_pool_blocks=64).run_continuous(
+    base = engine(kv_pool_blocks=64, fused_rounds=False).run_continuous(
         mkreqs(prompts, mx), max_active=4)
     for g, wid in ((9, 1), (5, 0)):
-        eng = engine(kv_pool_blocks=64, replication=True, fused_rounds=True)
+        eng = engine(kv_pool_blocks=64, replication=True)
         rep = eng.run_continuous(mkreqs(prompts, mx), max_active=4,
                                  fail_at={g: wid})
         assert rep.failures == 1 and rep.recoveries == 1
@@ -119,9 +120,9 @@ def test_fused_failure_recovery_token_identical():
 
 def test_fused_preemption_tiny_pool():
     prompts = _prompts(2, [8], seed=5)
-    base = engine(kv_pool_blocks=64).run_continuous(
+    base = engine(kv_pool_blocks=64, fused_rounds=False).run_continuous(
         mkreqs(prompts, 10), max_active=2)
-    fus = engine(kv_pool_blocks=4, fused_rounds=True).run_continuous(
+    fus = engine(kv_pool_blocks=4).run_continuous(
         mkreqs(prompts, 10), max_active=2)
     assert fus.preemptions >= 1
     assert fus.tokens == base.tokens
@@ -130,45 +131,67 @@ def test_fused_preemption_tiny_pool():
 @pytest.mark.slow
 def test_fused_swapping_and_tiered_adoption():
     prompts = _prompts(6, [8, 12])
-    base = engine(kv_pool_blocks=64).run_continuous(
+    base = engine(kv_pool_blocks=64, fused_rounds=False).run_continuous(
         mkreqs(prompts, 5), max_active=4)
-    rs = engine(kv_pool_blocks=64, swapping=True,
-                fused_rounds=True).run_continuous(mkreqs(prompts, 5),
-                                                  max_active=4)
+    rs = engine(kv_pool_blocks=64,
+                swapping=True).run_continuous(mkreqs(prompts, 5),
+                                              max_active=4)
     assert rs.tokens == base.tokens
     shared = _prompts(1, [16], seed=9)[0]
     sp = [np.concatenate([shared,
                           _prompts(1, [6], seed=10 + i)[0]]) for i in range(3)]
     kw = dict(tiered=True, kv_pool_blocks=128, host_cache_blocks=16,
               ssd_cache_blocks=64, prefill_chunk_tokens=4)
-    oracle = engine(**kw).run_continuous(mkreqs(sp, 3), max_active=2)
-    fus = engine(fused_rounds=True, **kw).run_continuous(mkreqs(sp, 3),
-                                                         max_active=2)
+    oracle = engine(fused_rounds=False, **kw).run_continuous(
+        mkreqs(sp, 3), max_active=2)
+    fus = engine(**kw).run_continuous(mkreqs(sp, 3), max_active=2)
     assert fus.tokens == oracle.tokens
     assert fus.prefill_tokens_saved == oracle.prefill_tokens_saved > 0
 
 
-def test_fused_gate_excludes_window_and_meta():
-    """A dense config carrying a sliding window or meta tokens must NOT pass
-    the fused gate: the batched mask does not carry window/meta bounds, so
-    fusing such a config would decode wrong tokens silently.  With the knob
-    on, the engine must fall back to the per-sequence path cleanly."""
-    prompts = _prompts(3, [8])
-    for patch in (dict(sliding_window=8),
+def test_fused_gate_accepts_window_and_meta():
+    """The batched mask path carries per-sequence window starts and meta-
+    token sink bounds, so a dense config with a sliding window and/or meta
+    tokens now fuses BY DEFAULT — token-identically to the per-sequence
+    oracle, in strictly fewer pipeline passes.  (Before this gate was
+    relaxed, such configs were hard-excluded from fusing; see
+    `fused_supported` in repro.core.cluster for what still falls back.)"""
+    prompts = _prompts(4, [8, 12])
+    for patch in (dict(sliding_window=6),
                   dict(num_meta_tokens=2),
-                  dict(sliding_window=8, num_meta_tokens=2)):
+                  dict(sliding_window=6, num_meta_tokens=2,
+                       full_attn_layers=(0,))):
         cfg = dataclasses.replace(CFG, **patch)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         base = ServingEngine(cfg, model, params, 2, paged=True,
-                             kv_pool_blocks=64).run_continuous(
-            mkreqs(prompts, 3), max_active=3)
+                             kv_pool_blocks=64,
+                             fused_rounds=False).run_continuous(
+            mkreqs(prompts, 4), max_active=3)
         eng = ServingEngine(cfg, model, params, 2, paged=True,
-                            kv_pool_blocks=64, fused_rounds=True)
-        assert eng.cluster.fused_ok is False, patch
-        rep = eng.run_continuous(mkreqs(prompts, 3), max_active=3)
-        assert rep.tokens == base.tokens
-        assert rep.pass_trace == base.pass_trace, patch
+                            kv_pool_blocks=64)
+        assert eng.cluster.fused_ok is True, patch
+        rep = eng.run_continuous(mkreqs(prompts, 4), max_active=3)
+        assert rep.tokens == base.tokens, patch
+        assert sum(rep.pass_trace) < sum(base.pass_trace), patch
+
+
+def test_fused_gate_accepts_alibi():
+    """bloom-style ALiBi (pos_emb='alibi', no RoPE) fuses by default: the
+    batched kernel applies per-head slopes against per-sequence lengths."""
+    cfg = dataclasses.replace(PAPER_ARCHS["bloom-176b"].reduced(),
+                              dtype="float32", num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(4, [8, 12])
+    base = ServingEngine(cfg, model, params, 2, paged=True, kv_pool_blocks=64,
+                         fused_rounds=False).run_continuous(
+        mkreqs(prompts, 4), max_active=3)
+    eng = ServingEngine(cfg, model, params, 2, paged=True, kv_pool_blocks=64)
+    assert eng.cluster.fused_ok is True
+    rep = eng.run_continuous(mkreqs(prompts, 4), max_active=3)
+    assert rep.tokens == base.tokens
+    assert sum(rep.pass_trace) < sum(base.pass_trace)
 
 
 # ---------------------------------------------------------------------------
@@ -205,10 +228,54 @@ if HAVE_HYPOTHESIS:
         fail_at = dict([fail]) if fail else None
         if fail:
             kw["replication"] = True
-        base = engine(**kw).run_continuous(
+        base = engine(fused_rounds=False, **kw).run_continuous(
             mkreqs(prompts, mx), max_active=max_active, fail_at=fail_at)
-        fus = engine(fused_rounds=True, **kw).run_continuous(
+        fus = engine(**kw).run_continuous(
             mkreqs(prompts, mx), max_active=max_active, fail_at=fail_at)
+        assert fus.tokens == base.tokens
+
+    ALIBI_CFG = dataclasses.replace(PAPER_ARCHS["bloom-176b"].reduced(),
+                                    dtype="float32", num_layers=2)
+    WINDOWED_CFG = dataclasses.replace(CFG, sliding_window=6,
+                                       num_meta_tokens=2,
+                                       full_attn_layers=(0,))
+
+    @pytest.mark.slow
+    @settings(max_examples=4, deadline=None)
+    @given(cfg=st.sampled_from([ALIBI_CFG, WINDOWED_CFG]),
+           n=st.integers(2, 4), tail=st.integers(1, 10),
+           chunk=st.sampled_from([0, 6]), bs=st.sampled_from([4, 8]),
+           pool=st.sampled_from([24, 128]),
+           fail=st.one_of(st.none(), st.tuples(st.integers(3, 10),
+                                               st.integers(0, 1))),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_fused_alibi_and_window(cfg, n, tail, chunk, bs, pool,
+                                             fail, seed):
+        """The newly-fusable attention variants — bloom-style ALiBi and
+        hymba-style sliding-window + meta sinks with a full-attention layer
+        mix — keep the fused == per-sequence identity across random prompt
+        lengths, block sizes, chunking, pool pressure, and injected worker
+        death."""
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(0, cfg.vocab_size,
+                                (tail + 3 * (i % 3),)).astype(np.int32)
+                   for i in range(n)]
+        mx = [int(rng.integers(1, 6)) for _ in range(n)]
+        kw = dict(kv_pool_blocks=pool, kv_block_size=bs,
+                  prefill_chunk_tokens=chunk)
+        fail_at = dict([fail]) if fail else None
+        if fail:
+            kw["replication"] = True
+
+        def run(**extra):
+            return ServingEngine(cfg, model, params, 2, paged=True,
+                                 **kw, **extra).run_continuous(
+                mkreqs(prompts, mx), max_active=3, fail_at=fail_at)
+
+        base = run(fused_rounds=False)
+        fus = run()
         assert fus.tokens == base.tokens
 
 

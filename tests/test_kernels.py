@@ -99,6 +99,70 @@ def test_batched_decode_matches_per_sequence():
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("use_win,use_bias,num_meta", [
+    (True, False, 0),            # sliding window only
+    (True, False, 2),            # window + meta-token attention sinks
+    (False, True, 0),            # ALiBi slopes only
+    (True, True, 2),             # window + meta + ALiBi combined
+])
+def test_batched_decode_attention_window_bias(use_win, use_bias, num_meta,
+                                              dtype):
+    """ALiBi / sliding-window variants of the fused-round kernel vs oracle:
+    per-sequence window starts and per-head slopes ride scalar prefetch, so
+    one launch still serves B ragged sequences with heterogeneous masks."""
+    b, s, hq, hkv, d, bk = 3, 96, 4, 2, 16, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    lens = jnp.asarray([90, 96, 7], jnp.int32)
+    # window starts as the engine computes them: max(len - w, 0), w = 24;
+    # the short sequence starts at 0 (whole context inside the window)
+    wins = jnp.maximum(lens - 24, 0) if use_win else None
+    slopes = (jnp.asarray([2.0 ** -(i + 1) for i in range(hq)], jnp.float32)
+              if use_bias else None)
+    out = batched_decode_attention(q, k, v, lens, wins, slopes,
+                                   block_k=bk, num_meta=num_meta)
+    expected = ref.batched_decode_attention_ref(q, k, v, lens, wins, slopes,
+                                                num_meta=num_meta)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **_tol(dtype))
+
+
+def test_batched_decode_window_bias_matches_per_sequence():
+    """The windowed/ALiBi batched launch reproduces B independent dense
+    attends with the per-sequence mask/bias semantics the engine's oracle
+    path uses (meta sinks visible below `num_meta`, window elsewhere)."""
+    b, s, hq, hkv, d, g = 3, 64, 4, 2, 16, 2
+    num_meta, w = 2, 12
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    lens = jnp.asarray([40, 64, 9], jnp.int32)
+    wins = jnp.maximum(lens - w, 0)
+    slopes = jnp.asarray([0.5, 0.25, 0.125, 0.0625], jnp.float32)
+    out = batched_decode_attention(q, k, v, lens, wins, slopes,
+                                   block_k=32, num_meta=num_meta)
+    scale = 1.0 / np.sqrt(d)
+    for i in range(b):
+        n = int(lens[i])
+        pos = np.arange(s)
+        visible = (pos < n) & ((pos >= int(wins[i])) | (pos < num_meta))
+        qi = np.asarray(q[i], np.float32).reshape(hkv, g, d)
+        ki = np.asarray(k[i], np.float32)
+        sc = np.einsum("hgd,shd->hgs", qi, ki) * scale
+        sc = sc - slopes.reshape(hkv, g)[:, :, None] * np.maximum(
+            (n - 1) - pos, 0)[None, None, :]
+        sc = np.where(visible[None, None, :], sc, -np.inf)
+        p = np.exp(sc - sc.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        o = np.einsum("hgs,shd->hgd", p, np.asarray(v[i], np.float32))
+        np.testing.assert_allclose(np.asarray(out[i], np.float32),
+                                   o.reshape(hq, d), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("L,B,S,H,D,starts,w,tb", [
     (3, 3, 64, 4, 16, (0, 16, 56), 8, 8),
     (2, 2, 32, 2, 8, (24, 0), 8, 8),             # tail + head windows
