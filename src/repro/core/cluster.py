@@ -19,8 +19,8 @@ from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
 from repro.core.controller import Controller
 from repro.core.dejavulib import (NetworkTransport, PipelineTopo, StreamEngine,
-                                  stream_in, stream_in_blocks, stream_out,
-                                  stream_out_blocks)
+                                  faults, stream_in, stream_in_blocks,
+                                  stream_out, stream_out_blocks)
 from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 from repro.core.worker import StageWorker
 from repro.kvcache.paged import BlockPool, PoolExhausted, blocks_for
@@ -664,6 +664,9 @@ class DejaVuCluster:
     # failure handling (paper §4.2.3) + straggler migration
     # ------------------------------------------------------------------
     def inject_failure(self, wid: int) -> None:
+        # observability point only — lets a recorded trace (and fault_trace
+        # assertions) show every delivered kill, whatever path requested it
+        faults.fire("cluster.fail", tag=f"w{wid}")
         for w in set(self.prompt_group + self.token_group):
             if w.wid == wid:
                 w.kill()

@@ -1,4 +1,7 @@
 from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore, TransferRecord
+from repro.core.dejavulib.faults import (FaultInjected, FaultInjector,
+                                         FaultPlan, FaultSpec, FiredFault,
+                                         StreamTaskError, assert_no_leaks)
 from repro.core.dejavulib.primitives import (CacheChunk, PipelineTopo, fetch,
                                              flush, gather, plan_repartition,
                                              scatter, stream_in,
@@ -17,4 +20,6 @@ __all__ = [
     "gather",
     "stream_out", "stream_in", "stream_out_blocks", "stream_in_blocks",
     "plan_repartition", "PipelineTopo", "StreamEngine",
+    "FaultInjected", "FaultInjector", "FaultPlan", "FaultSpec", "FiredFault",
+    "StreamTaskError", "assert_no_leaks",
 ]

@@ -24,6 +24,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.dejavulib import faults
+
 
 @dataclass
 class TransferRecord:
@@ -152,6 +154,10 @@ class SSDStore:
                     np.save(f, np.asarray(array))
                     f.flush()
                     os.fsync(f.fileno())     # durable before the rename publishes
+                # Crash window under test: bytes are durable in the temp file
+                # but not yet published.  A fault here must leave a reader
+                # seeing the OLD block (or none) — never a torn one.
+                faults.fire("ssd.put", tag=key)
                 os.replace(tmp, path)        # atomic
             except BaseException:
                 try:

@@ -1,0 +1,374 @@
+"""Deterministic fault injection for DejaVuLib (paper §5: fault tolerance).
+
+DéjàVu's recovery story (KV-cache replication + streaming restore) is only
+as good as the failure scenarios it is tested under.  The serving engine's
+historical ``fail_at={gstep: wid}`` hook can kill a worker *between* steps,
+but every finer-grained streaming op — a background stream task, a transport
+transfer, a tier demotion, an SSD write — was implicitly assumed to never
+fail mid-flight.  This module makes those boundaries a first-class, tested
+surface: named **injection points** are woven through the DejaVuLib hot
+paths, each point keeps a deterministic per-run occurrence count, and a
+:class:`FaultPlan` targets "the Nth occurrence of point P" with a chosen
+fault kind.
+
+Injection points (see docs/faults.md for the catalog):
+
+==========================  =====================================================
+point                       fired from
+==========================  =====================================================
+``engine.step``             ServingEngine, once per scheduled sequence-step
+``cluster.fail``            DejaVuCluster.inject_failure (observability only)
+``stream.submit``           StreamEngine.submit (caller thread)
+``stream.task``             StreamEngine worker thread, before running a task
+``stream.wait``             StreamEngine.wait (caller thread)
+``stream.drain``            StreamEngine.drain, before the barrier
+``transport.transfer.<k>``  Transport.transfer, ``<k>`` in local/hostlink/
+                            ici/net/ssd (one counter per link kind)
+``tier.demote``             KVTierManager demotion (HBM→host, host→SSD spill)
+``tier.promote``            KVTierManager._read (promotion toward HBM)
+``ssd.put``                 SSDStore.put, between the fsync'd temp write and
+                            the atomic rename
+==========================  =====================================================
+
+Fault kinds and how each site realizes them:
+
+- ``worker_death``  — calls the installed ``worker_killer(wid)`` (the engine
+  binds this to ``DejaVuCluster.inject_failure``); the op itself proceeds.
+- ``error``         — raises :class:`FaultInjected` at the point (a hard,
+  non-retryable crash of that op).
+- ``task_error``    — raises at ``stream.task``; the stream worker treats it
+  as transient and retries the task once (the counter has advanced, so the
+  retry runs clean).
+- ``ssd_write``     — raises inside ``SSDStore.put`` before the rename; the
+  temp file is removed, the published block is untouched (old-or-none).
+  Stream tasks treat it as transient and retry, like ``task_error``.
+- ``drop``          — returned to the site: Transport.transfer retransmits
+  and charges the modeled time of both attempts.
+- ``corrupt``       — returned to the site: Transport.transfer flips a byte
+  in the received copy, detects the mismatch (stand-in for a checksum), and
+  retransmits.
+- ``delay``         — returned to the site: a straggler; ``delay_s`` modeled
+  seconds are charged to the site's timeline (no data effect).
+
+Determinism: points fired from the StreamEngine worker thread (``stream.task``,
+background transfers, ``ssd.put``) are serialized by the FIFO queue, and the
+cluster drains the streamer at fixed barriers (after each replication round,
+before tier reads), so per-point occurrence counts are reproducible across
+runs of the same workload.  The crash-consistency sweep in
+``tests/test_crash_consistency.py`` leans on this: it records the
+injection-point trace of a reference run, then re-runs once per point with a
+fault at the middle occurrence, asserting token-identical recovered output
+and zero leaked pool/tier blocks.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+FAULT_KINDS = ("error", "task_error", "worker_death", "drop", "corrupt",
+               "ssd_write", "delay")
+
+#: kinds the StreamEngine worker treats as transient (one deterministic retry)
+RETRYABLE_KINDS = frozenset({"task_error", "ssd_write"})
+
+#: kinds realized locally by the firing site (fire() returns the spec)
+_SITE_KINDS = frozenset({"drop", "corrupt", "delay"})
+
+#: kinds that raise FaultInjected out of fire()
+_RAISE_KINDS = frozenset({"error", "task_error", "ssd_write"})
+
+
+class FaultInjected(Exception):
+    """Raised by :meth:`FaultInjector.fire` for raising fault kinds.
+
+    Deliberately NOT a RuntimeError: the serving engine's recovery paths
+    catch RuntimeError as "a worker died"; an injected op crash must not be
+    silently absorbed by that handler unless a site chooses to retry it.
+    """
+
+    def __init__(self, spec: "FaultSpec", point: str, n: int):
+        super().__init__(
+            f"injected fault {spec.kind!r} at {point!r} occurrence {n}")
+        self.spec = spec
+        self.point = point
+        self.n = n
+
+
+class StreamTaskError(Exception):
+    """One or more fire-and-forget stream tasks failed in the background.
+
+    Raised by ``StreamEngine.drain()`` / ``close()`` with the first failure
+    as ``__cause__``.  Not a RuntimeError for the same reason as
+    :class:`FaultInjected`.
+    """
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Fault one (or a window of) occurrence(s) of a named injection point.
+
+    ``nth`` is 1-based; the spec matches occurrences ``nth .. nth+times-1``.
+    """
+    point: str
+    nth: int
+    kind: str = "error"
+    wid: Optional[int] = None      # worker_death target
+    delay_s: float = 0.0           # delay kind: modeled straggler seconds
+    times: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+        if self.nth < 1 or self.times < 1:
+            raise ValueError("nth and times are 1-based counts")
+        if self.kind == "worker_death" and self.wid is None:
+            raise ValueError("worker_death spec needs a target wid")
+
+    def matches(self, point: str, n: int) -> bool:
+        return point == self.point and self.nth <= n < self.nth + self.times
+
+
+class FaultPlan:
+    """An ordered collection of :class:`FaultSpec`s, indexed by point."""
+
+    def __init__(self, specs: Iterable[FaultSpec] = ()):
+        self._by_point: Dict[str, List[FaultSpec]] = {}
+        self.specs: List[FaultSpec] = []
+        for s in specs:
+            self.add(s)
+
+    def add(self, spec: FaultSpec) -> "FaultPlan":
+        self.specs.append(spec)
+        self._by_point.setdefault(spec.point, []).append(spec)
+        return self
+
+    def match(self, point: str, n: int) -> Optional[FaultSpec]:
+        for s in self._by_point.get(point, ()):
+            if s.matches(point, n):
+                return s
+        return None
+
+    @classmethod
+    def from_fail_at(cls, fail_at: Dict[int, int],
+                     point: str = "engine.step") -> "FaultPlan":
+        """Shim: the legacy ``fail_at={gstep: wid}`` kwarg as a plan.
+
+        ``engine.step`` fires exactly once per global step, so occurrence
+        number == gstep and the old semantics carry over unchanged.
+        """
+        return cls(FaultSpec(point, nth=g, kind="worker_death", wid=w)
+                   for g, w in sorted(fail_at.items()))
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def __repr__(self) -> str:
+        return f"FaultPlan({self.specs!r})"
+
+
+@dataclass
+class FiredFault:
+    """One realized fault (what EngineReport.fault_trace carries)."""
+    point: str
+    n: int
+    kind: str
+    tag: str = ""
+    wid: Optional[int] = None
+
+
+class FaultInjector:
+    """Counts injection-point occurrences and realizes a :class:`FaultPlan`.
+
+    One injector == one run.  ``counts`` maps point → occurrences seen;
+    with ``record=True`` every firing is appended to ``trace`` as
+    ``(point, n, tag)`` — the crash-consistency sweep records a reference
+    trace this way, then replays it one fault at a time.  ``fired`` lists
+    the faults actually realized.
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None, record: bool = False):
+        self.plan = plan if plan is not None else FaultPlan()
+        self.record = record
+        self.counts: Dict[str, int] = {}
+        self.trace: List[Tuple[str, int, str]] = []
+        self.fired: List[FiredFault] = []
+        self.worker_killer: Optional[Callable[[Optional[int]], None]] = None
+        self._lock = threading.Lock()
+
+    def fire(self, point: str, tag: str = "") -> Optional[FaultSpec]:
+        """Count one occurrence of `point`; realize a planned fault if any.
+
+        Returns None (no fault, or a worker_death already delivered via
+        ``worker_killer``), returns the spec for site-realized kinds
+        (drop/corrupt/delay), or raises :class:`FaultInjected`.
+        """
+        with self._lock:
+            n = self.counts.get(point, 0) + 1
+            self.counts[point] = n
+            if self.record:
+                self.trace.append((point, n, tag))
+            spec = self.plan.match(point, n)
+            if spec is not None:
+                self.fired.append(
+                    FiredFault(point, n, spec.kind, tag, spec.wid))
+        if spec is None:
+            return None
+        # Actions run OUTSIDE the lock: worker_killer may re-enter fire()
+        # (inject_failure fires "cluster.fail").
+        if spec.kind == "worker_death":
+            if self.worker_killer is None:
+                raise FaultInjected(spec, point, n)
+            self.worker_killer(spec.wid)
+            return None
+        if spec.kind in _RAISE_KINDS:
+            raise FaultInjected(spec, point, n)
+        return spec
+
+
+# ---------------------------------------------------------------------------
+# Module-global installation.  Sites call `faults.fire(point, tag)`; with no
+# injector installed that is a near-free early-out, so instrumented hot paths
+# cost nothing in normal serving.
+
+_ACTIVE: Optional[FaultInjector] = None
+
+
+def install(inj: FaultInjector) -> FaultInjector:
+    global _ACTIVE
+    _ACTIVE = inj
+    return inj
+
+
+def uninstall() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def current() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+@contextmanager
+def active(inj: FaultInjector):
+    """Install `inj` for the duration of a with-block (restores the prior)."""
+    prev = _ACTIVE
+    install(inj)
+    try:
+        yield inj
+    finally:
+        if prev is None:
+            uninstall()
+        else:
+            install(prev)
+
+
+def fire(point: str, tag: str = "") -> Optional[FaultSpec]:
+    inj = _ACTIVE
+    if inj is None:
+        return None
+    return inj.fire(point, tag)
+
+
+# ---------------------------------------------------------------------------
+# Crash-consistency sweep driver helpers (engine-agnostic; the test module
+# owns workload construction).
+
+def survivable_kinds(point: str) -> List[str]:
+    """Fault kinds a correct implementation must fully recover from at
+    `point` — token-identical output, no leaked blocks (docs/faults.md)."""
+    if point in ("engine.step", "stream.drain"):
+        return ["worker_death"]
+    if point == "stream.task":
+        return ["task_error", "delay"]
+    if point.startswith("transport.transfer."):
+        return (["corrupt", "drop", "delay"]
+                if point.endswith(".net") else ["drop", "delay"])
+    if point == "ssd.put":
+        return ["ssd_write"]
+    if point in ("tier.demote", "tier.promote", "stream.submit",
+                 "stream.wait"):
+        return ["delay"]
+    if point == "cluster.fail":
+        return []          # this IS the failure mechanism, not a victim
+    return ["delay"]
+
+
+def spec_for_point(point: str, count: int, kind: Optional[str] = None, *,
+                   wid: Optional[int] = None, nth: Optional[int] = None,
+                   delay_s: float = 1e-3) -> FaultSpec:
+    """Build the sweep's spec for `point` seen `count` times on the
+    reference trace: middle occurrence, first survivable kind by default."""
+    if kind is None:
+        kinds = survivable_kinds(point)
+        if not kinds:
+            raise ValueError(f"point {point!r} has no survivable fault kinds")
+        kind = kinds[0]
+    if nth is None:
+        nth = (count + 1) // 2 or 1
+    return FaultSpec(point, nth=nth, kind=kind, wid=wid, delay_s=delay_s)
+
+
+def coverage_summary(reference: FaultInjector,
+                     exercised: Dict[str, dict]) -> dict:
+    """JSON-able points-seen vs points-exercised summary (CI artifact)."""
+    seen = dict(sorted(reference.counts.items()))
+    return {
+        "points_seen": seen,
+        "points_exercised": exercised,
+        "unexercised": sorted(p for p in seen
+                              if p not in exercised and survivable_kinds(p)),
+    }
+
+
+def assert_no_leaks(cluster) -> None:
+    """Post-run invariant: every retired sequence released everything.
+
+    Checks, per live worker: (a) the block pool is fully free and holds no
+    page tables; (b) no ``pagedswap/`` residue in the host store or replica
+    stores; (c) the KV tier holds no ``swap``-kind entries (prefix-cache
+    entries are legitimate — they are a cache, not ownership).
+    """
+    workers = list(dict.fromkeys(
+        list(getattr(cluster, "prompt_group", [])) +
+        list(getattr(cluster, "token_group", []))))
+    for w in workers:
+        pool = getattr(w, "pool", None)
+        if pool is not None:
+            used = pool.num_used()
+            if used:
+                raise AssertionError(
+                    f"worker {w.wid}: {used} pool block(s) leaked")
+            if getattr(pool, "tables", None):
+                raise AssertionError(
+                    f"worker {w.wid}: page tables leaked: "
+                    f"{sorted(pool.tables)}")
+        cache = getattr(w, "cache", None)
+        if cache is not None:
+            stale = [k for k in cache.host.keys()
+                     if k.startswith("pagedswap/")]
+            if stale:
+                raise AssertionError(
+                    f"worker {w.wid}: host swap residue: {stale[:4]}...")
+            stale = [k for k in cache.replica.keys() if "/seq" in k]
+            if stale:
+                raise AssertionError(
+                    f"worker {w.wid}: replica residue: {stale[:4]}...")
+        tier = getattr(w, "tier", None)
+        if tier is not None:
+            swaps = [e.key for e in tier._entries.values()
+                     if e.kind == "swap"]
+            if swaps:
+                raise AssertionError(
+                    f"worker {w.wid}: tier swap entries leaked: {swaps[:4]}")
+
+
+__all__ = [
+    "FAULT_KINDS", "RETRYABLE_KINDS", "FaultInjected", "StreamTaskError",
+    "FaultSpec", "FaultPlan", "FiredFault", "FaultInjector",
+    "install", "uninstall", "current", "active", "fire",
+    "survivable_kinds", "spec_for_point", "coverage_summary",
+    "assert_no_leaks",
+]

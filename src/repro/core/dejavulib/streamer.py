@@ -9,6 +9,19 @@ Overlap accounting (simulated-hardware time): each submitted task carries a
 `model_seconds` estimate; `overlap_report()` compares total streamed time
 against the compute intervals registered via `compute_span()` — the exposed
 (non-hidden) streaming time is what DéjàVu's optimizations minimize.
+
+Error handling: `wait()` on a task re-raises its error directly.  Errors of
+fire-and-forget tasks nobody waits on are collected and re-raised (first
+failure as ``__cause__`` of a :class:`~repro.core.dejavulib.faults.
+StreamTaskError`) at the next `drain()` or `close()` barrier, so a failed
+background replication or spill can never be silently dropped.
+
+Fault injection: `submit` / the worker loop / `wait` / `drain` fire the
+``stream.submit`` / ``stream.task`` / ``stream.wait`` / ``stream.drain``
+points (see `repro.core.dejavulib.faults`).  An injected transient fault
+(`task_error`, or an `ssd_write` raised from inside the closure) is retried
+once by the worker thread — the paper's streaming layer retransmits on
+recoverable I/O errors rather than declaring the node dead.
 """
 from __future__ import annotations
 
@@ -17,6 +30,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
+
+from repro.core.dejavulib import faults
 
 
 @dataclass
@@ -39,38 +54,81 @@ class StreamEngine:
         self._stream_model_time = 0.0
         self._compute_model_time = 0.0
         self._lock = threading.Lock()
+        self._errors: List[_Task] = []   # failed tasks nobody waited on yet
+        self._closed = False
+        self._submit_lock = threading.Lock()
 
     def _run(self):
         while True:
             task = self._q.get()
             if task is None:
                 return
+            extra_model = 0.0
             try:
+                spec = faults.fire("stream.task", tag=task.tag)
+                if spec is not None and spec.kind == "delay":
+                    extra_model = spec.delay_s       # injected straggler
                 task.result = task.fn()
-            except BaseException as e:  # surfaced on wait()
+            except faults.FaultInjected as e:
+                if e.spec.kind in faults.RETRYABLE_KINDS:
+                    try:                 # transient I/O fault: one retry
+                        task.result = task.fn()
+                    except BaseException as e2:
+                        task.error = e2
+                else:
+                    task.error = e
+            except BaseException as e:   # surfaced on wait()/drain()/close()
                 task.error = e
+            if task.error is not None:
+                with self._lock:
+                    self._errors.append(task)
             with self._lock:
-                self._stream_model_time += task.model_seconds
+                self._stream_model_time += task.model_seconds + extra_model
             task.done.set()
 
     def submit(self, fn: Callable[[], object], *, model_seconds: float = 0.0,
                tag: str = "") -> _Task:
+        spec = faults.fire("stream.submit", tag=tag)
+        if spec is not None and spec.kind == "delay":
+            model_seconds += spec.delay_s
         t = _Task(fn, model_seconds, tag)
-        self._q.put(t)
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError(
+                    f"stream engine {self.name!r} is closed; "
+                    f"cannot submit {tag!r}")
+            self._q.put(t)
         return t
 
-    @staticmethod
-    def wait(task: _Task, timeout: Optional[float] = None):
+    def wait(self, task: _Task, timeout: Optional[float] = None):
+        faults.fire("stream.wait", tag=task.tag)
         if not task.done.wait(timeout):
             raise TimeoutError(f"stream task {task.tag!r} timed out")
         if task.error is not None:
+            with self._lock:
+                if task in self._errors:     # waited-on: caller handles it
+                    self._errors.remove(task)
             raise task.error
         return task.result
 
     def drain(self, timeout: float = 60.0) -> None:
-        """Block until the queue is empty (barrier)."""
+        """Block until the queue is empty (barrier); surface background
+        errors of fire-and-forget tasks that failed since the last barrier."""
+        faults.fire("stream.drain", tag=self.name)
         sentinel = self.submit(lambda: None, tag="drain")
         self.wait(sentinel, timeout)
+        self._raise_background_errors()
+
+    def _raise_background_errors(self) -> None:
+        with self._lock:
+            failed, self._errors = self._errors, []
+        if failed:
+            first = failed[0]
+            raise StreamTaskError(
+                f"{len(failed)} background stream task(s) failed on "
+                f"{self.name!r}; first: {first.tag!r} "
+                f"({type(first.error).__name__}: {first.error})"
+            ) from first.error
 
     def compute_span(self, model_seconds: float) -> None:
         """Register compute time available to hide streaming behind."""
@@ -91,5 +149,18 @@ class StreamEngine:
             self._compute_model_time = 0.0
 
     def close(self) -> None:
-        self._q.put(None)
+        """Stop the worker thread.  Idempotent.  Raises if the thread fails
+        to exit or if background tasks failed and were never surfaced."""
+        with self._submit_lock:
+            first_close = not self._closed
+            self._closed = True
+            if first_close:
+                self._q.put(None)        # sentinel: drain queue, then exit
         self._thread.join(timeout=5)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                f"stream engine {self.name!r}: worker thread did not exit")
+        self._raise_background_errors()
+
+
+StreamTaskError = faults.StreamTaskError   # re-export at the raising site

@@ -19,6 +19,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.dejavulib import faults
 from repro.core.dejavulib.buffers import TransferRecord
 
 
@@ -57,12 +58,36 @@ class Transport:
 
     def transfer(self, array: np.ndarray, *, tag: str = "",
                  n_messages: int = 1) -> np.ndarray:
-        """Copy `array` across this transport; returns the received copy."""
+        """Copy `array` across this transport; returns the received copy.
+
+        Fires the ``transport.transfer.<kind>`` injection point.  A ``drop``
+        fault loses the first copy in flight; a ``corrupt`` fault flips a
+        byte of the received copy, which the integrity check (stand-in for a
+        checksum) detects.  Either way the transfer retransmits — the caller
+        always receives exact bytes — and the modeled timeline is charged
+        for every attempt, so the straggler cost of a lossy link stays
+        visible to the overlap/benchmark accounting.
+        """
+        spec = faults.fire(f"transport.transfer.{self.kind}", tag=tag)
         t0 = time.perf_counter()
         out = np.array(array, copy=True)
+        attempts, note = 1, ""
+        if spec is not None and spec.kind in ("drop", "corrupt"):
+            if spec.kind == "drop":
+                out = None                       # receiver saw nothing
+            else:
+                flat = out.reshape(-1).view(np.uint8)
+                if flat.size:
+                    flat[0] ^= 0xFF              # bit-flip in flight
+            src = np.asarray(array)
+            if out is None or out.tobytes() != src.tobytes():
+                out = np.array(array, copy=True)  # retransmit
+                attempts, note = 2, f"+retry({spec.kind})"
         wall = time.perf_counter() - t0
-        rec = TransferRecord(self.kind, out.nbytes,
-                             self.model_time(out.nbytes, n_messages), wall, tag)
+        model = self.model_time(out.nbytes, n_messages) * attempts
+        if spec is not None and spec.kind == "delay":
+            model += spec.delay_s                # injected straggler
+        rec = TransferRecord(self.kind, out.nbytes, model, wall, tag + note)
         with self._lock:
             self.log.append(rec)
         return out

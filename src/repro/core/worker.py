@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import functools
 import math
+import threading
 import time
 from typing import Dict, Optional, Tuple
 
@@ -266,9 +267,24 @@ class StageWorker:
     def kill(self) -> None:
         """Machine failure: device KV, host store, and hosted replica all die.
         The tier manager's host tier dies too; its SSD tier is disk and
-        survives (recovery reattaches it on the replacement worker)."""
+        survives (recovery reattaches it on the replacement worker).
+
+        Queued write-behinds are flushed before tier-1 state is wiped:
+        already-issued DMA/disk writes complete even as the host dies (a
+        transfer truly lost in flight is modeled by the transport ``drop``
+        fault instead).  Without the flush a queued spill would observe the
+        post-mortem empty host store and corrupt the tier index."""
         self.alive = False
         self.kv.clear()
+        if (self.tier is not None
+                and threading.current_thread() is not self.tier.streamer._thread):
+            try:
+                self.tier.streamer.drain()
+            except Exception:
+                # a write-behind racing the failure dies with the worker;
+                # recovery must not trust its bytes (on_host_failure
+                # re-verifies every on_ssd claim against the disk)
+                pass
         self.cache.host.clear()
         self.cache.replica.clear()
         if self.tier is not None:

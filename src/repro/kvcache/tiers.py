@@ -46,6 +46,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.dejavulib import faults
 from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore
 from repro.core.dejavulib.streamer import StreamEngine
 from repro.core.dejavulib.transport import (DEFAULT_HW, HardwareModel,
@@ -107,6 +108,13 @@ class KVTierManager:
     def _bump(self, key: str, v: float = 1) -> None:
         self._stats[key] = self._stats.get(key, 0) + v
 
+    def _fault_point(self, point: str, tag: str) -> None:
+        """Fire a tier injection point; a `delay` fault charges straggler
+        time to the tier's modeled timeline (raising kinds propagate)."""
+        spec = faults.fire(point, tag=tag)
+        if spec is not None and spec.kind == "delay":
+            self._bump("fault_delay_model_s", spec.delay_s)
+
     def _submit(self, fn, model_seconds: float = 0.0, tag: str = "") -> None:
         self._pending.append(self.streamer.submit(
             fn, model_seconds=model_seconds, tag=tag))
@@ -131,7 +139,13 @@ class KVTierManager:
     def _sync(self) -> None:
         """Barrier before any read: wait for in-flight write-behinds and
         surface their errors."""
-        self.streamer.drain()
+        try:
+            self.streamer.drain()
+        except faults.StreamTaskError:
+            # our own write-behind failed: _reap re-raises it with tier
+            # context (which key, which task) — the contract readers test
+            self._reap()
+            raise      # not ours (e.g. a replication send): propagate as-is
         self._reap()
 
     def _touch(self, key: str) -> None:
@@ -174,6 +188,7 @@ class KVTierManager:
     def _admit_host(self, entry: _Entry, packed: np.ndarray) -> None:
         """Place `entry`'s bytes in tier 1 — or straight in tier 2 when no
         host room can be made; the actual copy is write-behind."""
+        self._fault_point("tier.demote", entry.key)
         if not self._make_host_room(entry):
             self._admit_ssd(entry, packed)
             return
@@ -202,6 +217,7 @@ class KVTierManager:
     def _spill_to_ssd(self, entry: _Entry) -> None:
         """Demote one host-resident entry to tier 2 (write-behind)."""
         key = entry.key
+        self._fault_point("tier.demote", f"spill-{key}")
         self._bump("spills")
         if entry.on_ssd:                    # disk already holds a copy
             entry.tier = TIER_SSD
@@ -213,8 +229,12 @@ class KVTierManager:
         link = self.ssdlink
 
         def _spill():
-            arr = self.host.pop(key)        # FIFO: the host put already ran
+            # idempotent (a transient SSD-write fault retries the whole
+            # closure): the host copy survives until the disk write is
+            # durable, then retires — never pop-then-write
+            arr = self.host.get(key)        # FIFO: the host put already ran
             self.ssd.put(key, link.transfer(arr, tag=key))
+            self.host.delete(key)
 
         self._bump("write_behind_model_s", link.model_time(entry.nbytes))
         self._submit(_spill, model_seconds=link.model_time(entry.nbytes),
@@ -263,18 +283,30 @@ class KVTierManager:
         """Synchronous up-tier read of one entry (caller synced first).
         Returns the transferred copy and refreshes LRU/tier state."""
         key = entry.key
-        if entry.tier == TIER_HOST:
-            arr = self.hostlink.transfer(self.host.get(key), tag=key)
-            self._bump("host_hits")
-        else:
-            # a promotion earlier in this chain may have scheduled a spill
-            # whose SSD write has not landed yet — wait for the queue
-            self._sync()
+        self._fault_point("tier.promote", key)
+        try:
+            if entry.tier == TIER_HOST:
+                arr = self.hostlink.transfer(self.host.get(key), tag=key)
+                self._bump("host_hits")
+                self._touch(key)
+                return arr
+        except KeyError as e:
+            # the worker died mid-read and its host tier was wiped — surface
+            # as the recoverable "worker lost" error class, not a KeyError
+            raise RuntimeError(
+                f"tier {self.name!r}: host entry {key!r} lost mid-read") from e
+        # a promotion earlier in this chain may have scheduled a spill
+        # whose SSD write has not landed yet — wait for the queue
+        self._sync()
+        try:
             arr = self.ssdlink.transfer(self.ssd.get(key), tag=key)
-            arr = self.hostlink.transfer(arr, tag=key)    # SSD → host → HBM
-            self._bump("ssd_hits")
-            entry.nbytes = arr.nbytes
-            self._promote_to_host(entry, arr)
+        except FileNotFoundError as e:
+            raise RuntimeError(
+                f"tier {self.name!r}: SSD entry {key!r} lost mid-read") from e
+        arr = self.hostlink.transfer(arr, tag=key)    # SSD → host → HBM
+        self._bump("ssd_hits")
+        entry.nbytes = arr.nbytes
+        self._promote_to_host(entry, arr)
         self._touch(key)
         return arr
 
@@ -439,10 +471,14 @@ class KVTierManager:
     # ------------------------------------------------------------------
     def on_host_failure(self) -> None:
         """The worker died: tier 1 (its RAM) dies with it; tier 2 is disk and
-        survives.  Entries whose only copy was host-resident are lost."""
+        survives.  Entries whose only copy was host-resident are lost.  An
+        ``on_ssd`` claim is only trusted if the bytes actually reached disk —
+        a spill whose write died with the worker must not leave an index
+        entry pointing at nothing."""
         self.host.clear()
+        self._pending.clear()            # in-flight write-behinds died too
         for key, entry in list(self._entries.items()):
-            if entry.on_ssd:
+            if entry.on_ssd and key in self.ssd:
                 entry.tier = TIER_SSD
             else:
                 del self._entries[key]

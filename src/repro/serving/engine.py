@@ -27,14 +27,15 @@ bit-identically.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import asdict, dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.cluster import DejaVuCluster
+from repro.core.dejavulib import faults
 from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
 from repro.kvcache.paged import PoolExhausted
 from repro.serving.request import Microbatch, Request, form_microbatches
@@ -75,6 +76,10 @@ class EngineReport:
     # pass while prefills are in flight, plus admission first-passes); the
     # per-sequence oracle path runs one pass per live sequence per round.
     pass_trace: List[int] = field(default_factory=list)
+    # one dict per fault the run's FaultInjector realized (point, n, kind,
+    # tag, wid) — lets tests assert WHERE a fault landed, not just that
+    # failures/recoveries were counted (see repro.core.dejavulib.faults)
+    fault_trace: List[dict] = field(default_factory=list)
 
 
 class ServingEngine:
@@ -109,13 +114,55 @@ class ServingEngine:
                                      fused_rounds=fused_rounds)
 
     # ------------------------------------------------------------------
+    # fault-injection plumbing (shared by both serving loops)
+    # ------------------------------------------------------------------
+    def _install_faults(self, fail_at, fault_plan, fault_injector,
+                        report: EngineReport
+                        ) -> Tuple[Optional[faults.FaultInjector], object]:
+        """Bind this run's FaultInjector and install it as the process-wide
+        active injector.  The legacy ``fail_at={gstep: wid}`` kwarg becomes
+        ``engine.step`` worker_death specs (that point fires exactly once
+        per scheduled step, so occurrence == gstep).  Returns (injector,
+        previously-active injector) for `_teardown_faults`."""
+        if fault_injector is None and not fail_at and fault_plan is None:
+            return None, None
+        inj = fault_injector if fault_injector is not None \
+            else faults.FaultInjector(fault_plan)
+        for g, w in sorted((fail_at or {}).items()):
+            inj.plan.add(faults.FaultSpec("engine.step", nth=g,
+                                          kind="worker_death", wid=w))
+
+        def _kill(wid):
+            self.cluster.inject_failure(wid)
+            report.failures += 1
+
+        inj.worker_killer = _kill
+        prev = faults.current()
+        faults.install(inj)
+        return inj, prev
+
+    @staticmethod
+    def _teardown_faults(inj, prev, report: EngineReport) -> None:
+        if inj is None:
+            return
+        if prev is None:
+            faults.uninstall()
+        else:
+            faults.install(prev)
+        report.fault_trace = [asdict(f) for f in inj.fired]
+
+    # ------------------------------------------------------------------
     def run(self, requests: List[Request], *,
             fail_at: Optional[Dict[int, int]] = None,
             migrate_at: Optional[Dict[int, int]] = None,
-            repartition_at: Optional[Dict[int, int]] = None) -> EngineReport:
+            repartition_at: Optional[Dict[int, int]] = None,
+            fault_plan: Optional[faults.FaultPlan] = None,
+            fault_injector: Optional[faults.FaultInjector] = None
+            ) -> EngineReport:
         """fail_at / migrate_at: {global_step: worker_id}; repartition_at:
-        {global_step: new_depth}."""
-        fail_at = dict(fail_at or {})
+        {global_step: new_depth}.  `fault_plan` / `fault_injector` drive the
+        general injection layer (`repro.core.dejavulib.faults`); `fail_at`
+        is the legacy shim for worker death at a step boundary."""
         migrate_at = dict(migrate_at or {})
         repartition_at = dict(repartition_at or {})
         mbs = form_microbatches(requests, self.microbatch)
@@ -123,45 +170,47 @@ class ServingEngine:
         depth = len(self.cluster.token_group)
         slots: List[Optional[Microbatch]] = [None] * depth
         report = EngineReport(tokens={r.rid: r.tokens for r in requests})
+        inj, prev = self._install_faults(fail_at, fault_plan, fault_injector,
+                                         report)
         gstep = 0
 
         def active_ids() -> List[int]:
             return [s.mb for s in slots if s is not None]
 
-        while any(s is not None for s in slots) or queue:
-            for q in range(depth):
-                if slots[q] is None and queue:
-                    slots[q] = queue.pop(0)
-            progressed = False
-            for q in range(depth):
-                mb = slots[q]
-                if mb is None:
-                    continue
-                progressed = True
-                gstep += 1
-                # --- scheduled control events -------------------------------
-                if gstep in fail_at:
-                    self.cluster.inject_failure(fail_at.pop(gstep))
-                    report.failures += 1
-                if gstep in migrate_at:
-                    res = self.cluster.migrate_worker(migrate_at.pop(gstep),
-                                                      active_ids())
-                    report.recoveries += 1
-                    self._apply_resume(res, slots, report)
-                if gstep in repartition_at:
-                    self.cluster.repartition(repartition_at.pop(gstep), active_ids())
+        try:
+            while any(s is not None for s in slots) or queue:
+                for q in range(depth):
+                    if slots[q] is None and queue:
+                        slots[q] = queue.pop(0)
+                for q in range(depth):
+                    mb = slots[q]
+                    if mb is None:
+                        continue
+                    gstep += 1
+                    # --- scheduled control events ---------------------------
+                    faults.fire("engine.step", tag=f"mb{mb.mb}")
+                    if gstep in migrate_at:
+                        res = self.cluster.migrate_worker(
+                            migrate_at.pop(gstep), active_ids())
+                        report.recoveries += 1
+                        self._apply_resume(res, slots, report)
+                    if gstep in repartition_at:
+                        self.cluster.repartition(repartition_at.pop(gstep),
+                                                 active_ids())
 
-                # --- advance this slot one step ------------------------------
-                try:
-                    self._advance(mb, report)
-                except RuntimeError:
-                    # a dead worker was hit mid-pipeline: detect + recover
-                    resume = self.cluster.detect_and_recover(active_ids())
-                    report.recoveries += 1
-                    self._apply_resume(resume, slots, report)
-                    self._advance(mb, report)  # re-execute this slot's step
-                if mb.done:
-                    slots[q] = None
+                    # --- advance this slot one step --------------------------
+                    try:
+                        self._advance(mb, report)
+                    except RuntimeError:
+                        # a dead worker was hit mid-pipeline: detect + recover
+                        resume = self.cluster.detect_and_recover(active_ids())
+                        report.recoveries += 1
+                        self._apply_resume(resume, slots, report)
+                        self._advance(mb, report)  # re-execute this slot's step
+                    if mb.done:
+                        slots[q] = None
+        finally:
+            self._teardown_faults(inj, prev, report)
         report.peak_kv_bytes = self.cluster.kv_bytes_peak
         return report
 
@@ -170,7 +219,10 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def run_continuous(self, requests: List[Request], *,
                        max_active: int = 4,
-                       fail_at: Optional[Dict[int, int]] = None) -> EngineReport:
+                       fail_at: Optional[Dict[int, int]] = None,
+                       fault_plan: Optional[faults.FaultPlan] = None,
+                       fault_injector: Optional[faults.FaultInjector] = None
+                       ) -> EngineReport:
         """Continuous-batching loop (requires ``paged=True``).
 
         The policy (admission, resume, preemption victims, retirement) lives
@@ -202,27 +254,30 @@ class ServingEngine:
         """
         cl = self.cluster
         assert cl.paged, "run_continuous requires ServingEngine(..., paged=True)"
-        fail_at = dict(fail_at or {})
         sched = RoundScheduler(cl, requests, max_active=max_active)
         report = EngineReport(tokens={r.rid: r.tokens for r in requests})
-        self._gstep = 0
+        inj, prev = self._install_faults(fail_at, fault_plan, fault_injector,
+                                         report)
         fused = cl.fused_ok
-        while sched.pending():
-            cl.round_prefill_model_s = 0.0
-            self._round_decodes = 0
-            self._round_passes = 0
-            plan = sched.plan_round(
-                lambda r: self._advance_seq(r, sched, report, fail_at))
-            report.batch_trace.append(plan.n_active)
-            if fused:
-                self._execute_round_fused(plan, sched, report, fail_at)
-            else:
-                self._execute_round(plan, sched, report, fail_at)
-            # --- retire finished sequences (blocks free immediately) --------
-            sched.retire()
-            if self._round_decodes:
-                report.prefill_stall_trace.append(cl.round_prefill_model_s)
-            report.pass_trace.append(self._round_passes)
+        try:
+            while sched.pending():
+                cl.round_prefill_model_s = 0.0
+                self._round_decodes = 0
+                self._round_passes = 0
+                plan = sched.plan_round(
+                    lambda r: self._advance_seq(r, sched, report))
+                report.batch_trace.append(plan.n_active)
+                if fused:
+                    self._execute_round_fused(plan, sched, report)
+                else:
+                    self._execute_round(plan, sched, report)
+                # --- retire finished sequences (blocks free immediately) ----
+                sched.retire()
+                if self._round_decodes:
+                    report.prefill_stall_trace.append(cl.round_prefill_model_s)
+                report.pass_trace.append(self._round_passes)
+        finally:
+            self._teardown_faults(inj, prev, report)
         report.peak_kv_bytes = cl.kv_bytes_peak
         report.prefill_tokens_total = cl.prefill_tokens_total
         report.prefill_tokens_saved = cl.prefill_tokens_saved
@@ -234,7 +289,7 @@ class ServingEngine:
     # per-sequence oracle path: one pipeline pass per request per round
     # ------------------------------------------------------------------
     def _execute_round(self, plan: StepPlan, sched: RoundScheduler,
-                       report: EngineReport, fail_at: Dict[int, int]) -> None:
+                       report: EngineReport) -> None:
         for r in plan.work:
             if not sched.is_active(r.rid):
                 continue        # dropped by a mid-round preemption
@@ -242,7 +297,7 @@ class ServingEngine:
                 continue        # budget spent at admission (or eos'd)
             while True:
                 try:
-                    self._advance_seq(r, sched, report, fail_at)
+                    self._advance_seq(r, sched, report)
                     break
                 except PoolExhausted:
                     self._preempt_victim_or_raise(sched, report,
@@ -253,15 +308,14 @@ class ServingEngine:
     # prefills are in flight)
     # ------------------------------------------------------------------
     def _execute_round_fused(self, plan: StepPlan, sched: RoundScheduler,
-                             report: EngineReport,
-                             fail_at: Dict[int, int]) -> None:
+                             report: EngineReport) -> None:
         # snapshot the round's split BEFORE running anything: like the oracle
         # path, every request advances ONE step per round — a prompt whose
         # prefill completes this round decodes only from the NEXT round on
         pf = [r for r in plan.work if sched.is_active(r.rid)
               and sched.next_step[r.rid] == 0 and not r.done]
         dec0 = [r for r in plan.work if sched.next_step[r.rid] >= 1]
-        if pf and not self._fused_prefill_pass(pf, sched, report, fail_at):
+        if pf and not self._fused_prefill_pass(pf, sched, report):
             return              # a worker died: recovered state runs next round
         while True:
             dec = [r for r in dec0 if sched.is_active(r.rid) and not r.done
@@ -269,7 +323,7 @@ class ServingEngine:
             if not dec:
                 return
             try:
-                self._fused_decode_pass(dec, sched, report, fail_at)
+                self._fused_decode_pass(dec, sched, report)
                 return
             except PoolExhausted:
                 # same victim policy as the oracle path, except the whole
@@ -296,18 +350,15 @@ class ServingEngine:
         report.preemptions += 1
 
     def _fused_prefill_pass(self, pf: List[Request], sched: RoundScheduler,
-                            report: EngineReport,
-                            fail_at: Dict[int, int]) -> bool:
+                            report: EngineReport) -> bool:
         """Advance every in-flight prefill one chunk: chunk-mode prefills
         pack into ONE pipeline pass; oracle-mode ones (chunking disabled)
         fall back to one pass each.  Returns False if a worker death was
         recovered (the round ends; rolled-back work reruns next round)."""
         cl = self.cluster
-        for _ in pf:            # one logical step per packed prefill, so
-            self._gstep += 1    # fail_at points land like the oracle path's
-            if self._gstep in fail_at:
-                cl.inject_failure(fail_at.pop(self._gstep))
-                report.failures += 1
+        for r in pf:            # one logical step per packed prefill, so
+            # engine.step occurrences land like the oracle path's
+            faults.fire("engine.step", tag=f"prefill-r{r.rid}")
         try:
             for r in pf:
                 # staging allocates (adopt_prefix / whole-prompt tables), and
@@ -351,14 +402,10 @@ class ServingEngine:
         sched.next_step[r.rid] = 1
 
     def _fused_decode_pass(self, dec: List[Request], sched: RoundScheduler,
-                           report: EngineReport,
-                           fail_at: Dict[int, int]) -> None:
+                           report: EngineReport) -> None:
         cl = self.cluster
-        for _ in dec:
-            self._gstep += 1
-            if self._gstep in fail_at:
-                cl.inject_failure(fail_at.pop(self._gstep))
-                report.failures += 1
+        for r in dec:
+            faults.fire("engine.step", tag=f"decode-r{r.rid}")
         rids = [r.rid for r in dec]
         steps = [sched.next_step[r.rid] for r in dec]
         last = np.asarray([r.tokens[s - 1] for r, s in zip(dec, steps)],
@@ -393,7 +440,7 @@ class ServingEngine:
                 cl.abort_prefill(rr.rid)
 
     def _advance_seq(self, r: Request, sched: RoundScheduler,
-                     report: EngineReport, fail_at: Dict[int, int]) -> None:
+                     report: EngineReport) -> None:
         """One per-request step (prefill if next_step==0, else decode), with
         the same failure-injection / detect-recover contract as `_advance`.
         Preempted sequences join the recovery set: their swap copies on the
@@ -401,10 +448,7 @@ class ServingEngine:
         and roll back."""
         cl = self.cluster
         next_step = sched.next_step
-        self._gstep += 1
-        if self._gstep in fail_at:
-            cl.inject_failure(fail_at.pop(self._gstep))
-            report.failures += 1
+        faults.fire("engine.step", tag=f"r{r.rid}")
         covered = sched.covered()
         live = [a.rid for a in covered if not a.done]
         if r.rid not in live:

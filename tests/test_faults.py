@@ -1,0 +1,346 @@
+"""Unit tests for the deterministic fault-injection layer
+(`repro.core.dejavulib.faults`) and the StreamEngine hardening that rides
+with it: background-error surfacing, post-close submit rejection, transport
+drop/corrupt-then-retry, SSD crash-mid-write atomicity, and the engine's
+`fail_at` → FaultPlan shim with `EngineReport.fault_trace`.
+
+The exhaustive per-mode crash-consistency sweep lives in
+tests/test_crash_consistency.py (slow).
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import PAPER_ARCHS
+from repro.core.dejavulib import faults
+from repro.core.dejavulib.buffers import SSDStore
+from repro.core.dejavulib.faults import (FaultInjected, FaultInjector,
+                                         FaultPlan, FaultSpec, StreamTaskError)
+from repro.core.dejavulib.streamer import StreamEngine
+from repro.core.dejavulib.transport import LocalTransport, NetworkTransport
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultInjector mechanics
+# ---------------------------------------------------------------------------
+
+def test_injector_counts_points_independently():
+    inj = FaultInjector(record=True)
+    with faults.active(inj):
+        faults.fire("a", tag="x")
+        faults.fire("b")
+        faults.fire("a", tag="y")
+    assert inj.counts == {"a": 2, "b": 1}
+    assert inj.trace == [("a", 1, "x"), ("b", 1, ""), ("a", 2, "y")]
+    assert inj.fired == []
+
+
+def test_plan_targets_nth_occurrence_only():
+    plan = FaultPlan([FaultSpec("p", nth=2, kind="error")])
+    inj = FaultInjector(plan)
+    with faults.active(inj):
+        assert faults.fire("p") is None           # 1st: clean
+        with pytest.raises(FaultInjected) as ei:
+            faults.fire("p")                      # 2nd: boom
+        assert ei.value.n == 2 and ei.value.point == "p"
+        assert faults.fire("p") is None           # 3rd: clean again
+    assert [f.n for f in inj.fired] == [2]
+
+
+def test_spec_times_window_matches_consecutive_occurrences():
+    plan = FaultPlan([FaultSpec("p", nth=2, kind="delay", delay_s=0.5,
+                                times=2)])
+    inj = FaultInjector(plan)
+    with faults.active(inj):
+        got = [faults.fire("p") for _ in range(4)]
+    assert [g.kind if g else None for g in got] == [None, "delay", "delay",
+                                                   None]
+
+
+def test_no_injector_installed_is_a_noop():
+    assert faults.current() is None
+    assert faults.fire("anything") is None
+
+
+def test_site_kinds_return_spec_instead_of_raising():
+    plan = FaultPlan([FaultSpec("p", nth=1, kind="drop")])
+    with faults.active(FaultInjector(plan)):
+        spec = faults.fire("p")
+    assert spec.kind == "drop"
+
+
+def test_worker_death_without_killer_raises():
+    plan = FaultPlan([FaultSpec("p", nth=1, kind="worker_death", wid=0)])
+    with faults.active(FaultInjector(plan)):
+        with pytest.raises(FaultInjected):
+            faults.fire("p")
+
+
+def test_worker_death_calls_bound_killer():
+    killed = []
+    plan = FaultPlan([FaultSpec("p", nth=1, kind="worker_death", wid=3)])
+    inj = FaultInjector(plan)
+    inj.worker_killer = killed.append
+    with faults.active(inj):
+        assert faults.fire("p") is None
+    assert killed == [3]
+    assert inj.fired[0].wid == 3
+
+
+def test_from_fail_at_shim_builds_engine_step_specs():
+    plan = FaultPlan.from_fail_at({9: 2, 5: 0})
+    assert [(s.nth, s.wid) for s in plan.specs] == [(5, 0), (9, 2)]
+    assert all(s.point == "engine.step" and s.kind == "worker_death"
+               for s in plan.specs)
+
+
+def test_spec_validation_rejects_bad_kinds_and_counts():
+    with pytest.raises(ValueError):
+        FaultSpec("p", nth=1, kind="nope")
+    with pytest.raises(ValueError):
+        FaultSpec("p", nth=0)
+    with pytest.raises(ValueError):
+        FaultSpec("p", nth=1, kind="worker_death")   # no wid
+
+
+# ---------------------------------------------------------------------------
+# StreamEngine hardening (satellites: background errors, close semantics)
+# ---------------------------------------------------------------------------
+
+def test_background_error_surfaces_on_drain():
+    eng = StreamEngine("bg-drain")
+    eng.submit(lambda: 1 / 0, tag="boom")        # fire-and-forget
+    with pytest.raises(StreamTaskError) as ei:
+        eng.drain()
+    assert isinstance(ei.value.__cause__, ZeroDivisionError)
+    assert "boom" in str(ei.value)
+    eng.drain()                                  # consumed: clean barrier
+    eng.close()
+
+
+def test_background_error_surfaces_on_close():
+    eng = StreamEngine("bg-close")
+    eng.submit(lambda: 1 / 0, tag="boom")
+    with pytest.raises(StreamTaskError):
+        eng.close()
+    assert not eng._thread.is_alive()
+
+
+def test_waited_error_is_not_double_reported():
+    eng = StreamEngine("bg-wait")
+    t = eng.submit(lambda: 1 / 0, tag="boom")
+    with pytest.raises(ZeroDivisionError):
+        eng.wait(t)
+    eng.drain()                                  # caller handled it: clean
+    eng.close()
+
+
+def test_submit_after_close_is_rejected():
+    eng = StreamEngine("closing")
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(lambda: None, tag="late")
+    eng.close()                                  # idempotent
+    assert not eng._thread.is_alive()
+
+
+def test_injected_task_error_is_retried_once():
+    plan = FaultPlan([FaultSpec("stream.task", nth=1, kind="task_error")])
+    inj = FaultInjector(plan)
+    ran = []
+    with faults.active(inj):
+        eng = StreamEngine("retry")
+        t = eng.submit(lambda: ran.append(1) or "ok", tag="job")
+        assert eng.wait(t, timeout=5) == "ok"
+        eng.drain()                              # no background error kept
+        eng.close()
+    assert ran == [1]                            # fault hit before fn ran
+    assert [f.kind for f in inj.fired] == ["task_error"]
+
+
+def test_injected_hard_error_is_not_retried():
+    plan = FaultPlan([FaultSpec("stream.task", nth=1, kind="error")])
+    with faults.active(FaultInjector(plan)):
+        eng = StreamEngine("hard")
+        t = eng.submit(lambda: "ok", tag="job")
+        with pytest.raises(FaultInjected):
+            eng.wait(t, timeout=5)
+        eng.close()
+
+
+def test_injected_submit_delay_charges_model_time():
+    plan = FaultPlan([FaultSpec("stream.submit", nth=1, kind="delay",
+                                delay_s=2.5)])
+    with faults.active(FaultInjector(plan)):
+        eng = StreamEngine("late")
+        eng.submit(lambda: None, model_seconds=1.0, tag="job")
+        eng.drain()
+    assert eng.overlap_report()["stream_s"] == pytest.approx(3.5)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Transport faults: drop / corrupt are detected and retransmitted
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["drop", "corrupt"])
+def test_transport_fault_retransmits_exact_bytes(kind):
+    tr = LocalTransport()
+    plan = FaultPlan([FaultSpec("transport.transfer.local", nth=2, kind=kind)])
+    src = np.arange(32, dtype=np.float32)
+    with faults.active(FaultInjector(plan)) as inj:
+        a1 = tr.transfer(src, tag="t1")
+        a2 = tr.transfer(src, tag="t2")
+    np.testing.assert_array_equal(a1, src)
+    np.testing.assert_array_equal(a2, src)       # exact despite the fault
+    assert [f.kind for f in inj.fired] == [kind]
+    # the retransmission is charged to the modeled timeline and tagged
+    assert tr.log[1].model_seconds == pytest.approx(2 * tr.log[0].model_seconds)
+    assert tr.log[1].tag == f"t2+retry({kind})"
+    assert tr.log[0].tag == "t1"
+
+
+def test_transport_delay_charges_straggler_time():
+    tr = NetworkTransport()
+    plan = FaultPlan([FaultSpec("transport.transfer.net", nth=1, kind="delay",
+                                delay_s=7.0)])
+    src = np.ones(4, np.float32)
+    with faults.active(FaultInjector(plan)):
+        out = tr.transfer(src, tag="slow")
+    np.testing.assert_array_equal(out, src)
+    base = tr.model_time(src.nbytes)
+    assert tr.log[0].model_seconds == pytest.approx(base + 7.0)
+
+
+def test_transport_points_are_per_link_kind():
+    """A plan aimed at the net link must not perturb hostlink traffic."""
+    net, loc = NetworkTransport(), LocalTransport()
+    plan = FaultPlan([FaultSpec("transport.transfer.net", nth=1, kind="drop")])
+    with faults.active(FaultInjector(plan)) as inj:
+        loc.transfer(np.ones(4), tag="l")
+        net.transfer(np.ones(4), tag="n")
+    assert inj.counts == {"transport.transfer.local": 1,
+                          "transport.transfer.net": 1}
+    assert loc.log[0].tag == "l"                 # untouched
+    assert net.log[0].tag == "n+retry(drop)"
+
+
+# ---------------------------------------------------------------------------
+# SSD crash-mid-write (satellite): old block or none, never torn
+# ---------------------------------------------------------------------------
+
+def test_ssd_crash_mid_write_leaves_old_block(tmp_path):
+    store = SSDStore(str(tmp_path), name="crashy")
+    old = np.arange(64, dtype=np.float32).reshape(8, 8)
+    store.put("pfx/1", old)
+    plan = FaultPlan([FaultSpec("ssd.put", nth=1, kind="ssd_write")])
+    with faults.active(FaultInjector(plan)):
+        with pytest.raises(FaultInjected):
+            store.put("pfx/1", np.zeros((16, 16), np.float32))
+    # a NEW handle (fresh process after the crash) sees the old bytes intact
+    np.testing.assert_array_equal(SSDStore(str(tmp_path)).get("pfx/1"), old)
+    assert store.size("pfx/1") > 0
+
+
+def test_ssd_crash_mid_write_fresh_key_sees_none(tmp_path):
+    store = SSDStore(str(tmp_path), name="crashy")
+    plan = FaultPlan([FaultSpec("ssd.put", nth=1, kind="ssd_write")])
+    with faults.active(FaultInjector(plan)):
+        with pytest.raises(FaultInjected):
+            store.put("pfx/2", np.ones(4))
+    assert "pfx/2" not in store
+    assert SSDStore(str(tmp_path)).keys() == []
+    # the fsync'd temp file was cleaned up, not leaked
+    assert [f for f in os.listdir(tmp_path) if ".tmp." in f] == []
+
+
+def test_ssd_put_succeeds_after_transient_fault_window(tmp_path):
+    """The same key writes cleanly once the faulted occurrence has passed —
+    the crash left no state that blocks a retry (what the stream worker's
+    retry path relies on)."""
+    store = SSDStore(str(tmp_path))
+    plan = FaultPlan([FaultSpec("ssd.put", nth=1, kind="ssd_write")])
+    arr = np.full(8, 7.0)
+    with faults.active(FaultInjector(plan)):
+        with pytest.raises(FaultInjected):
+            store.put("k", arr)
+        store.put("k", arr)                      # retry: counter advanced
+    np.testing.assert_array_equal(store.get("k"), arr)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: fail_at shim ≡ FaultPlan, fault_trace populated
+# ---------------------------------------------------------------------------
+
+CFG = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
+                          dtype="float32", num_layers=4)
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+RNG = np.random.default_rng(0)
+PROMPTS = RNG.integers(0, CFG.vocab_size, (2, 8)).astype(np.int32)
+N_NEW = 4
+
+
+def _mkreqs():
+    return [Request(rid=i, prompt=PROMPTS[i].copy(), max_new=N_NEW)
+            for i in range(2)]
+
+
+def _engine(**kw):
+    kw.setdefault("paged", True)
+    kw.setdefault("replication", True)
+    return ServingEngine(CFG, MODEL, PARAMS, 2, mode="colocated",
+                         microbatch=1, **kw)
+
+
+@pytest.fixture(scope="module")
+def baseline_tokens():
+    rep = _engine().run_continuous(_mkreqs(), max_active=2)
+    return rep.tokens
+
+
+def test_fail_at_shim_recovers_token_identical(baseline_tokens):
+    rep = _engine().run_continuous(_mkreqs(), max_active=2, fail_at={4: 1})
+    assert rep.failures == 1 and rep.recoveries == 1
+    assert rep.tokens == baseline_tokens
+    assert rep.fault_trace == [
+        {"point": "engine.step", "n": 4, "kind": "worker_death",
+         "tag": rep.fault_trace[0]["tag"], "wid": 1}]
+
+
+def test_fault_plan_equivalent_to_fail_at(baseline_tokens):
+    plan = FaultPlan([FaultSpec("engine.step", nth=4, kind="worker_death",
+                                wid=1)])
+    rep = _engine().run_continuous(_mkreqs(), max_active=2, fault_plan=plan)
+    assert rep.failures == 1 and rep.recoveries == 1
+    assert rep.tokens == baseline_tokens
+
+
+def test_clean_run_leaves_no_fault_state(baseline_tokens):
+    eng = _engine()
+    rep = eng.run_continuous(_mkreqs(), max_active=2)
+    assert rep.fault_trace == [] and rep.failures == 0
+    assert faults.current() is None
+    faults.assert_no_leaks(eng.cluster)
+
+
+def test_injector_records_reference_trace(baseline_tokens):
+    inj = FaultInjector(record=True)
+    eng = _engine()
+    rep = eng.run_continuous(_mkreqs(), max_active=2, fault_injector=inj)
+    assert rep.tokens == baseline_tokens
+    assert faults.current() is None              # uninstalled after the run
+    assert inj.counts.get("engine.step", 0) > 0
+    assert inj.counts.get("stream.drain", 0) > 0        # replication barriers
+    assert inj.counts.get("transport.transfer.net", 0) > 0
+    # the trace is replayable: every (point, n) is unique and ordered
+    per_point = {}
+    for point, n, _tag in inj.trace:
+        assert n == per_point.get(point, 0) + 1
+        per_point[point] = n
+    assert per_point == inj.counts
