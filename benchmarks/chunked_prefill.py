@@ -21,7 +21,7 @@ import math
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_metric
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import plan
@@ -69,8 +69,9 @@ def measured_study() -> None:
     assert p99_chunk < p99_base, (
         f"interleaving did not reduce the decode-stall p99 "
         f"({p99_chunk:.2e}s vs {p99_base:.2e}s)")
-    emit("chunked_decode_stall_p99_ratio", 0.0,
-         f"{p99_base / max(p99_chunk, 1e-30):.1f}x")
+    emit_metric("chunked_decode_stall_p99_ratio",
+                p99_base / max(p99_chunk, 1e-30),
+                "atomic vs chunk-interleaved decode-round stall p99 (> 1)")
     # the long prompt really was spread over ceil(plen/chunk) passes
     assert chk.cluster.prefill_passes[2] == math.ceil(LONG_PLEN / CHUNK)
     emit("chunked_prefill_passes_long_prompt", 0.0,

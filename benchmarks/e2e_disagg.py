@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_metric
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import MachineSpec, plan
@@ -22,6 +22,7 @@ def _sweep(cfg, d, rates, n_jobs=48, mean_tok=150):
     toks = lmsys_like_tokens(n_jobs, seed=0, mean_target=mean_tok)
     p = plan(cfg, wl, d, mach)
     max_sustain = {"baseline": 0.0, "dejavu": 0.0}
+    sustain_thresh = None   # 1.25x the baseline's unloaded norm-lat
     for rate in rates:
         arr = poisson_arrivals(n_jobs, rate, seed=1)
         jobs = [Job(i, float(arr[i]), int(toks[i])) for i in range(n_jobs)]
@@ -31,20 +32,39 @@ def _sweep(cfg, d, rates, n_jobs=48, mean_tok=150):
              rb.normalized_latency * 1e6, f"makespan={rb.makespan:.0f}s")
         emit(f"fig12/{cfg.name}/D{d}/rate{rate:g}/dejavu_{p.d_prompt}-{p.d_token}_norm_lat",
              rdv.normalized_latency * 1e6, f"makespan={rdv.makespan:.0f}s")
-        # "sustained" = normalized latency below 2x the unloaded value
-        if rb.normalized_latency < 2 * rdv.normalized_latency or True:
-            pass
+        if np.isfinite(rb.normalized_latency) and \
+                np.isfinite(rdv.normalized_latency):
+            # headline invariant: disaggregation never costs normalized
+            # latency at any offered rate (the paper's Fig. 12 dominance)
+            assert rdv.normalized_latency <= rb.normalized_latency * 1.001, (
+                f"{cfg.name} rate={rate}: dejavu norm-lat "
+                f"{rdv.normalized_latency:.3f}s > baseline "
+                f"{rb.normalized_latency:.3f}s")
+        # "sustained" = normalized latency still within 25% of the
+        # baseline's unloaded (lowest-rate) value — a model-independent
+        # knee, unlike an absolute cut (BLOOM's unloaded norm-lat already
+        # exceeds OPT's saturated one)
+        if sustain_thresh is None:
+            sustain_thresh = 1.25 * rb.normalized_latency
         for k, r in (("baseline", rb), ("dejavu", rdv)):
             if np.isfinite(r.normalized_latency):
                 max_sustain[k] = max(max_sustain[k], rate) if \
-                    r.normalized_latency < 0.35 else max_sustain[k]
+                    r.normalized_latency < sustain_thresh else max_sustain[k]
     gain = (max_sustain["dejavu"] / max_sustain["baseline"]
             if max_sustain["baseline"] else float("nan"))
-    emit(f"fig12/{cfg.name}/sustained_rate_gain", gain * 1e6,
-         f"dejavu={max_sustain['dejavu']:g}rps baseline={max_sustain['baseline']:g}rps "
-         f"(paper: 1.88x OPT-66B, 2x BLOOM-176B)")
+    emit_metric(f"e2e_sustained_rate_gain_{cfg.name}", gain,
+                f"dejavu={max_sustain['dejavu']:g}rps "
+                f"baseline={max_sustain['baseline']:g}rps "
+                f"(paper: 1.88x OPT-66B, 2x BLOOM-176B)")
+    # headline gate: disaggregation sustains a strictly higher request rate
+    assert gain > 1.0, (
+        f"{cfg.name}: disaggregation sustained-rate gain {gain:.2f}x <= 1x")
 
 
 def run() -> None:
     _sweep(PAPER_ARCHS["opt-66b"], 8, rates=(0.2, 0.4, 0.6, 0.8, 1.0, 1.2))
     _sweep(PAPER_ARCHS["bloom-176b"], 12, rates=(0.1, 0.2, 0.3, 0.4, 0.6))
+
+
+if __name__ == "__main__":
+    run()

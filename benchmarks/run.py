@@ -46,7 +46,9 @@ def main() -> int:
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
             failed.append(name)
         print(f"{name}/total_s,{(time.time()-t0)*1e6:.0f},", flush=True)
-        flush_json(name)        # per-module JSON artifact even under -m run
+        # per-module JSON artifact even under -m run; keyed by the module's
+        # script stem so trend baselines match direct invocation
+        flush_json(modpath.rsplit(".", 1)[-1])
     if failed:
         print(f"FAILED gates: {', '.join(failed)}", file=sys.stderr)
     return 1 if failed else 0

@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timeit
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.dejavulib import HostMemoryStore, NetworkTransport, scatter
@@ -78,3 +78,35 @@ def run() -> None:
     emit("fig11/real/baseline_us", wall_base * 1e6, f"modeled={m_base*1e6:.1f}us")
     emit("fig11/real/buffered_us", wall_buf * 1e6,
          f"modeled={m_buf*1e6:.1f}us modeled_gain={m_base/m_buf:.1f}x")
+
+    # hot-path integrity-gate micro-benchmark: the O(nbytes) byte-compare
+    # standing in for a checksum (Transport._realize_loss) runs ONLY with a
+    # FaultInjector installed — normal streaming pays one copy + bookkeeping.
+    # Three regimes on a 4 MiB payload: no injector (fast path), injector
+    # installed but no matching fault (one counter bump), and always-corrupt
+    # (bit-flip + full compare + retransmit copy).  Wall times are
+    # informational, not trend-gated.
+    from repro.core.dejavulib import faults
+    payload = np.zeros(4 << 20, np.uint8)
+    tr.reset_log()
+    t_fast = timeit(lambda: tr.transfer(payload, tag="microbench"),
+                    iters=20, warmup=3)
+    idle = faults.FaultInjector()
+    with faults.active(idle):
+        t_idle = timeit(lambda: tr.transfer(payload, tag="microbench"),
+                        iters=20, warmup=3)
+    lossy = faults.FaultInjector(faults.FaultPlan([faults.FaultSpec(
+        "transport.transfer.net", nth=1, kind="corrupt", times=1 << 30)]))
+    with faults.active(lossy):
+        t_corrupt = timeit(lambda: tr.transfer(payload, tag="microbench"),
+                           iters=20, warmup=3)
+    emit("fig11/transfer_fastpath_us", t_fast,
+         "no injector: copy + bookkeeping, no byte-compare")
+    emit("fig11/transfer_injector_idle_us", t_idle,
+         f"injector installed, no matching fault ({t_idle/t_fast:.2f}x fast)")
+    emit("fig11/transfer_always_corrupt_us", t_corrupt,
+         f"integrity check + retransmit ({t_corrupt/t_fast:.2f}x fast path)")
+
+
+if __name__ == "__main__":
+    run()

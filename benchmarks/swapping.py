@@ -7,7 +7,7 @@ sequences/batches flip the inequality — both regimes are reported.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_metric
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.planner import MachineSpec
@@ -67,10 +67,20 @@ def run() -> None:
                                    beff=0.05, swapping=True)
             tp0 = b * sum(j.n_tokens for j in jobs) / r0.makespan
             tp2 = 2 * b * sum(j.n_tokens for j in jobs) / r2.makespan
-            emit(f"fig13/paperhw/{name}/D{d}/ctx{plen+gen}/b{b}_vs_swap2b",
-                 tp2 / tp0 * 1e6,
-                 f"gain={tp2/tp0:.2f}x (paper: up to 1.8x at short ctx, "
-                 f"<1x beyond the Fig.-28 crossover)")
+            gain = tp2 / tp0
+            emit_metric(f"swap_gain_{name}_D{d}_ctx{plen+gen}", gain,
+                        f"(paper: up to 1.8x at short ctx, <1x beyond the "
+                        f"Fig.-28 crossover)")
+            # headline invariant (App. E inequality): swapping wins at
+            # short contexts, loses beyond the Fig.-28 crossover
+            if plen + gen <= 512:
+                assert gain > 1.0, (
+                    f"{name} ctx{plen+gen}: swapping gain {gain:.2f}x <= 1x "
+                    f"in the paper's short-context regime")
+            else:
+                assert gain < 1.0, (
+                    f"{name} ctx{plen+gen}: swapping gain {gain:.2f}x >= 1x "
+                    f"beyond the crossover")
 
     # --- v5e regime: where does App. E's inequality hold? -------------------
     mach = MachineSpec()
@@ -81,8 +91,16 @@ def run() -> None:
         t = cm.stage_token_time(cfg, wl, lps, mach.chips, seq)
         tr = cm.swap_transfer_time(cfg, wl, lps, seq)
         window = 3 * t     # (D−1)·t prefetch window, D=4
-        emit(f"appE/opt-66b/v5e/seq{seq}/swap_vs_window", tr / window * 1e6,
-             f"transfer={tr*1e3:.2f}ms window={(window)*1e3:.2f}ms "
-             f"{'hidden' if tr <= window else 'EXPOSED'} "
-             f"(v5e hostlink/HBM ratio makes swapping pay only below "
-             f"{int(window * 16e9 / (cfg.kv_bytes_per_token() * 16 / 4))} ctx tokens)")
+        emit_metric(f"appE_swap_vs_window_seq{seq}", tr / window,
+                    f"transfer={tr*1e3:.2f}ms window={(window)*1e3:.2f}ms "
+                    f"{'hidden' if tr <= window else 'EXPOSED'} "
+                    f"(v5e hostlink/HBM ratio makes swapping pay only below "
+                    f"{int(window * 16e9 / (cfg.kv_bytes_per_token() * 16 / 4))} ctx tokens)")
+        # v5e regime check (the hardware-adaptation finding): the high
+        # HBM-bandwidth/host-link ratio EXPOSES the swap transfer at every
+        # measured sequence length — App. E's inequality is flipped on v5e
+        assert tr > window, f"seq{seq}: swap unexpectedly hidden on v5e"
+
+
+if __name__ == "__main__":
+    run()

@@ -26,7 +26,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_metric
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
 from repro.core.dejavulib.transport import DEFAULT_HW
@@ -89,10 +89,11 @@ def measured_study():
     miss_blocks = ts.get("demotions", 0)     # every demoted block was a miss once
     hit_rate = hit_blocks / max(hit_blocks + miss_blocks, 1)
     overlap = tier.cluster.streamer.overlap_report()
-    emit("tiered_prefill_tokens_saved", 0.0,
-         f"{rt.prefill_tokens_saved}/{rt.prefill_tokens_total} "
-         f"({saved_frac:.0%})")
-    emit("tiered_prefix_block_hit_rate", 0.0, f"{hit_rate:.0%}")
+    emit_metric("tiered_prefill_saved_frac", saved_frac,
+                f"{rt.prefill_tokens_saved}/{rt.prefill_tokens_total} "
+                f"prefill tokens skipped via prefix adoption (gate >= 0.30)")
+    emit_metric("tiered_prefix_block_hit_rate", hit_rate,
+                f"{hit_blocks} hit / {miss_blocks} miss blocks")
     emit("tiered_stall_model_us", 0.0, f"{ts.get('stall_model_s', 0) * 1e6:.1f}")
     emit("tiered_prefetch_model_us", 0.0,
          f"{ts.get('prefetch_model_s', 0) * 1e6:.1f}")

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
+from repro.core import telemetry
 from repro.core.controller import Controller
 from repro.core.dejavulib import (NetworkTransport, PipelineTopo, StreamEngine,
                                   faults, stream_in, stream_in_blocks,
@@ -123,6 +124,10 @@ class DejaVuCluster:
         self.prefill_passes: Dict[int, int] = {}     # rid -> passes last prefill
         self.adoption_suffix_log: List[Tuple[int, int]] = []  # (suffix_toks, passes)
         self.round_prefill_model_s = 0.0   # modeled prefill s this round (engine resets)
+        # telemetry clock marks of delivered kills; the engine closes each
+        # into a `cluster.recovery_s` observation at the first token emitted
+        # after the restore (paper: fail -> first post-restore token)
+        self._recovery_marks: List[float] = []
 
     # ------------------------------------------------------------------
     def live_kv_bytes(self) -> int:
@@ -167,9 +172,14 @@ class DejaVuCluster:
         self.mb_pos[mb] = plen
         self.mb_prompt_len[mb] = plen
         self.mb_max_len[mb] = max_len
-        x = tokens
-        for w in self.prompt_group:
-            x = w.prefill(mb, x, max_len)
+        with telemetry.span("pass", kind="mb_prefill"):
+            x = tokens
+            for w in self.prompt_group:
+                x = w.prefill(mb, x, max_len)
+            telemetry.advance(cm.stage_prompt_time(
+                self.cfg, cm.WorkloadSpec(prompt_len=plen, new_tokens=1,
+                                          microbatch=b),
+                self.cfg.num_layers, 8, self.hw))
         logits = x
         if self.mode == "disaggregated":
             self._stream_prompt_kv(mb, plen)
@@ -213,12 +223,17 @@ class DejaVuCluster:
         """One decode step through the token pipeline.  Returns logits [B,V].
         `step` is 1-based (step i consumes token_{i-1})."""
         pos = self.mb_pos[mb]
-        if self.swapping:
+        with telemetry.span("pass", kind="mb_decode"):
+            if self.swapping:
+                for w in self.token_group:
+                    w.restore(mb)
+            x = token
             for w in self.token_group:
-                w.restore(mb)
-        x = token
-        for w in self.token_group:
-            x = w.decode(mb, x, pos)
+                x = w.decode(mb, x, pos)
+            telemetry.advance(cm.stage_token_time(
+                self.cfg, cm.WorkloadSpec(prompt_len=max(pos, 1), new_tokens=1,
+                                          microbatch=self.mb_batch.get(mb, 1)),
+                self.cfg.num_layers, 8, pos + 1, self.hw))
         self.mb_pos[mb] = pos + 1
         if self.replication:
             self._replicate(mb, (pos, pos + 1), step=step, group=self.token_group)
@@ -321,6 +336,11 @@ class DejaVuCluster:
         self.prefill_tokens_total += plen
         ck = self.prefill_chunk_tokens
         khashes = self._adoptable_prefix(token_ids)
+        if self.tiered:
+            candidates = (plen - 1) // self.kv_block_size
+            telemetry.count("tier.prefix_hit_blocks", len(khashes))
+            telemetry.count("tier.prefix_miss_blocks",
+                            candidates - len(khashes))
         st = {"prompt": np.asarray(prompt, np.int32), "plen": plen,
               "start": 0, "pos": 0, "passes": 0, "x": None}
         if khashes:
@@ -355,25 +375,26 @@ class DejaVuCluster:
         None — the engine interleaves decode steps between calls."""
         st = self._pending_prefill[rid]
         plen, pos = st["plen"], st["pos"]
-        if st["mode"] == "batch":
-            x = jnp.asarray(st["prompt"])[None]
-            for w in self.prompt_group:
-                x, _ = w.prefill_paged(rid, x,
-                                       token_ids=[int(t) for t in st["prompt"]])
-            n_q = plen
-        elif st["mode"] == "chunk":
-            c = min(self.prefill_chunk_tokens, plen - pos)
-            x = jnp.asarray(st["prompt"][pos:pos + c])[None]
-            for w in self.prompt_group:
-                x = w.prefill_chunk_paged(rid, x, pos)
-            n_q = c
-        else:                            # token-at-a-time oracle path
-            x = jnp.asarray(st["prompt"][pos:pos + 1])
-            for w in self.prompt_group:
-                x = w.decode_paged(rid, x, pos)
-            n_q = 1
-        st["x"] = x
-        self._after_prefill_pass(rid, st, n_q)
+        with telemetry.span("pass", kind=f"prefill_{st['mode']}"):
+            if st["mode"] == "batch":
+                x = jnp.asarray(st["prompt"])[None]
+                for w in self.prompt_group:
+                    x, _ = w.prefill_paged(
+                        rid, x, token_ids=[int(t) for t in st["prompt"]])
+                n_q = plen
+            elif st["mode"] == "chunk":
+                c = min(self.prefill_chunk_tokens, plen - pos)
+                x = jnp.asarray(st["prompt"][pos:pos + c])[None]
+                for w in self.prompt_group:
+                    x = w.prefill_chunk_paged(rid, x, pos)
+                n_q = c
+            else:                        # token-at-a-time oracle path
+                x = jnp.asarray(st["prompt"][pos:pos + 1])
+                for w in self.prompt_group:
+                    x = w.decode_paged(rid, x, pos)
+                n_q = 1
+            st["x"] = x
+            self._after_prefill_pass(rid, st, n_q)
         if st["pos"] < plen:
             return None
         return self._finish_prefill(rid)
@@ -389,8 +410,10 @@ class DejaVuCluster:
         if st["mode"] == "chunk" and st["start"] == 0:
             for w in self.prompt_group:
                 w.publish_prefix_hashes(rid, self.seq_hashes[rid], st["pos"])
-        self.round_prefill_model_s += cm.chunked_prefill_pass_time(
+        t = cm.chunked_prefill_pass_time(
             self.cfg, n_q, st["pos"], self.cfg.num_layers, 8, self.hw)
+        self.round_prefill_model_s += t
+        telemetry.advance(t)
 
     def _finish_prefill(self, rid: int) -> jnp.ndarray:
         st = self._pending_prefill.pop(rid)
@@ -473,17 +496,23 @@ class DejaVuCluster:
         Raises PoolExhausted BEFORE mutating any pool, so the engine can
         preempt a victim and retry."""
         pos = self.seq_len[rid]
-        if self.swapping:
+        with telemetry.span("pass", kind="perseq_decode"):
+            if self.swapping:
+                for w in self.token_group:
+                    w.paged_restore(rid)
             for w in self.token_group:
-                w.paged_restore(rid)
-        for w in self.token_group:
-            if w.pool.append_needs_block(rid) and w.pool.num_free() == 0:
-                raise PoolExhausted(f"worker {w.wid} pool full (seq {rid})")
-        x = token
-        for w in self.token_group:
-            x = w.decode_paged(rid, x, pos)
-        self.seq_len[rid] = pos + 1
-        self._register_compute(1, pos + 1)
+                if w.pool.append_needs_block(rid) and w.pool.num_free() == 0:
+                    raise PoolExhausted(
+                        f"worker {w.wid} pool full (seq {rid})")
+            x = token
+            for w in self.token_group:
+                x = w.decode_paged(rid, x, pos)
+            self.seq_len[rid] = pos + 1
+            self._register_compute(1, pos + 1)
+            telemetry.advance(cm.stage_token_time(
+                self.cfg, cm.WorkloadSpec(prompt_len=max(pos, 1),
+                                          new_tokens=1, microbatch=1),
+                self.cfg.num_layers, 8, pos + 1, self.hw))
         if self.replication:
             self._replicate_paged(rid, step=step, pos=pos)
         if self.swapping:
@@ -511,23 +540,28 @@ class DejaVuCluster:
         tokens: [B] int32 (each sequence's last sampled token); steps:
         per-sequence 1-based decode step.  Returns logits [B,V]."""
         poses = [self.seq_len[rid] for rid in rids]
-        if self.swapping:
+        with telemetry.span("pass", kind="fused_decode"):
+            if self.swapping:
+                for w in self.token_group:
+                    for rid in rids:
+                        w.paged_restore(rid)
             for w in self.token_group:
-                for rid in rids:
-                    w.paged_restore(rid)
-        for w in self.token_group:
-            need = sum(1 for rid in rids if w.pool.append_needs_block(rid))
-            if need > w.pool.num_free():
-                raise PoolExhausted(
-                    f"worker {w.wid} pool cannot absorb a fused round of "
-                    f"{len(rids)} appends ({need} needed, "
-                    f"{w.pool.num_free()} free)")
-        x = jnp.asarray(np.asarray(tokens, np.int32))
-        for w in self.token_group:
-            x = w.decode_paged_batch(rids, x, poses)
-        for rid, pos in zip(rids, poses):
-            self.seq_len[rid] = pos + 1
-            self._register_compute(1, pos + 1)
+                need = sum(1 for rid in rids if w.pool.append_needs_block(rid))
+                if need > w.pool.num_free():
+                    raise PoolExhausted(
+                        f"worker {w.wid} pool cannot absorb a fused round of "
+                        f"{len(rids)} appends ({need} needed, "
+                        f"{w.pool.num_free()} free)")
+            x = jnp.asarray(np.asarray(tokens, np.int32))
+            for w in self.token_group:
+                x = w.decode_paged_batch(rids, x, poses)
+            for rid, pos in zip(rids, poses):
+                self.seq_len[rid] = pos + 1
+                self._register_compute(1, pos + 1)
+            ctx = max(1, (sum(poses) + len(poses)) // max(len(poses), 1))
+            telemetry.advance(cm.decode_round_time(
+                self.cfg, len(rids), ctx, self.cfg.num_layers, 8, self.hw,
+                fused=True))
         if self.replication:
             for rid, step, pos in zip(rids, steps, poses):
                 self._replicate_paged(rid, step=step, pos=pos)
@@ -549,6 +583,11 @@ class DejaVuCluster:
         set's longest and masked inside the pass.  Returns {rid:
         prefill_logits | None}; a completed prompt runs the same post-prefill
         streaming / replication / swap as the per-sequence path."""
+        with telemetry.span("pass", kind="chunkset"):
+            return self._prefill_chunkset_pass(rids)
+
+    def _prefill_chunkset_pass(self, rids: List[int]
+                               ) -> Dict[int, Optional[jnp.ndarray]]:
         sts = [self._pending_prefill[r] for r in rids]
         assert all(st["mode"] == "chunk" for st in sts), \
             "prefill_chunkset_pass packs chunk-mode prefills only"
@@ -667,12 +706,23 @@ class DejaVuCluster:
         # observability point only — lets a recorded trace (and fault_trace
         # assertions) show every delivered kill, whatever path requested it
         faults.fire("cluster.fail", tag=f"w{wid}")
+        t = telemetry.current()
+        if t is not None:
+            # mark the modeled clock; the engine closes the mark into a
+            # `cluster.recovery_s` observation at the first post-restore token
+            self._recovery_marks.append(t.clock_s)
+            t.count("cluster.failures", 1)
         for w in set(self.prompt_group + self.token_group):
             if w.wid == wid:
                 w.kill()
                 self.controller.log_event("failure", wid=wid)
                 return
         raise KeyError(wid)
+
+    def take_recovery_marks(self) -> List[float]:
+        """Drain the pending failure clock marks (see `inject_failure`)."""
+        marks, self._recovery_marks = self._recovery_marks, []
+        return marks
 
     def detect_and_recover(self, active_mbs: List[int]) -> Dict[int, int]:
         """Controller-driven recovery.  Returns {mb: resume_step} (empty if

@@ -67,6 +67,8 @@ from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
+from repro.core import telemetry
+
 FAULT_KINDS = ("error", "task_error", "worker_death", "drop", "corrupt",
                "ssd_write", "delay")
 
@@ -216,6 +218,7 @@ class FaultInjector:
                     FiredFault(point, n, spec.kind, tag, spec.wid))
         if spec is None:
             return None
+        telemetry.count("faults.fired", 1, kind=spec.kind, point=point)
         # Actions run OUTSIDE the lock: worker_killer may re-enter fire()
         # (inject_failure fires "cluster.fail").
         if spec.kind == "worker_death":

@@ -31,6 +31,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
+from repro.core import telemetry
 from repro.core.dejavulib import faults
 
 
@@ -71,6 +72,7 @@ class StreamEngine:
                 task.result = task.fn()
             except faults.FaultInjected as e:
                 if e.spec.kind in faults.RETRYABLE_KINDS:
+                    telemetry.count("stream.retries")
                     try:                 # transient I/O fault: one retry
                         task.result = task.fn()
                     except BaseException as e2:
@@ -80,10 +82,15 @@ class StreamEngine:
             except BaseException as e:   # surfaced on wait()/drain()/close()
                 task.error = e
             if task.error is not None:
+                telemetry.count("stream.task_errors")
                 with self._lock:
                     self._errors.append(task)
             with self._lock:
                 self._stream_model_time += task.model_seconds + extra_model
+            # integer-ns counters only from this thread: no spans, no clock
+            telemetry.count("stream.tasks_done")
+            telemetry.count_time("stream.model_ns",
+                                 task.model_seconds + extra_model)
             task.done.set()
 
     def submit(self, fn: Callable[[], object], *, model_seconds: float = 0.0,
@@ -92,6 +99,7 @@ class StreamEngine:
         if spec is not None and spec.kind == "delay":
             model_seconds += spec.delay_s
         t = _Task(fn, model_seconds, tag)
+        telemetry.count("stream.tasks_submitted")
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError(

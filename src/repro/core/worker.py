@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.dejavulib import (HostLinkTransport, HostMemoryStore,
                                   LocalTransport, NetworkTransport,
                                   StreamEngine)
@@ -274,6 +275,7 @@ class StageWorker:
         transfer truly lost in flight is modeled by the transport ``drop``
         fault instead).  Without the flush a queued spill would observe the
         post-mortem empty host store and corrupt the tier index."""
+        telemetry.count("worker.kills", 1, wid=self.wid)
         self.alive = False
         self.kv.clear()
         if (self.tier is not None
@@ -293,6 +295,8 @@ class StageWorker:
     def _check(self):
         if not self.alive:
             raise RuntimeError(f"worker {self.wid} is dead")
+        # every stage op (prefill/decode, paged or not) passes through here
+        telemetry.count("worker.stage_calls", 1, wid=self.wid)
 
     # ------------------------------------------------------------------
     def prefill(self, mb: int, x_or_tokens, max_len: int):

@@ -46,6 +46,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.dejavulib import faults
 from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore
 from repro.core.dejavulib.streamer import StreamEngine
@@ -107,6 +108,12 @@ class KVTierManager:
     # ------------------------------------------------------------------
     def _bump(self, key: str, v: float = 1) -> None:
         self._stats[key] = self._stats.get(key, 0) + v
+        # Mirror into the telemetry registry: time-valued keys accumulate
+        # integer ns, event keys stay integer counters.
+        if key.endswith("_s"):
+            telemetry.count_time(f"tier.{key[:-2]}_ns", v)
+        else:
+            telemetry.count(f"tier.{key}", int(v))
 
     def _fault_point(self, point: str, tag: str) -> None:
         """Fire a tier injection point; a `delay` fault charges straggler

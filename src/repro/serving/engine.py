@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import telemetry
 from repro.core.cluster import DejaVuCluster
 from repro.core.dejavulib import faults
 from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
@@ -80,6 +81,12 @@ class EngineReport:
     # tag, wid) — lets tests assert WHERE a fault landed, not just that
     # failures/recoveries were counted (see repro.core.dejavulib.faults)
     fault_trace: List[dict] = field(default_factory=list)
+    # telemetry snapshot (schema `repro.telemetry/v1`): counters, gauges,
+    # SLO histograms (TTFT / inter-token / queue wait / recovery time) and
+    # span aggregates on the modeled clock — see repro.core.telemetry and
+    # docs/observability.md.  Cumulative across runs when an ambient
+    # registry is installed (benchmarks do this to aggregate a module).
+    telemetry: Dict[str, object] = field(default_factory=dict)
 
 
 class ServingEngine:
@@ -112,6 +119,48 @@ class ServingEngine:
                                      ssd_cache_blocks=ssd_cache_blocks,
                                      prefill_chunk_tokens=prefill_chunk_tokens,
                                      fused_rounds=fused_rounds)
+        # rid -> modeled clock of its last emitted token (inter-token SLO)
+        self._emit_clock: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    # telemetry plumbing (shared by both serving loops)
+    # ------------------------------------------------------------------
+    def _install_telemetry(self) -> Tuple[telemetry.Telemetry, bool]:
+        """Reuse the ambient registry when one is installed (benchmarks
+        install one per module to aggregate across runs); otherwise create
+        a fresh per-run registry.  Returns (registry, created)."""
+        t = telemetry.current()
+        if t is not None:
+            return t, False
+        t = telemetry.Telemetry()
+        telemetry.install(t)
+        return t, True
+
+    @staticmethod
+    def _teardown_telemetry(t: telemetry.Telemetry, created: bool,
+                            report: EngineReport) -> None:
+        report.telemetry = t.snapshot()
+        if created:
+            telemetry.uninstall()
+
+    def _tele_emit(self, requests: List[Request], i: int) -> None:
+        """Per-token SLO observations at emit time, on the modeled clock:
+        TTFT (arrival -> first token), inter-token gap, and — at the first
+        token emitted after a failure's restore — the recovery-time span."""
+        t = telemetry.current()
+        if t is None:
+            return
+        now = t.clock_s
+        for r in requests:
+            if i == 0:
+                t.observe("engine.ttft_s", max(now - r.arrival, 0.0))
+            else:
+                prev = self._emit_clock.get(r.rid)
+                if prev is not None:
+                    t.observe("engine.inter_token_s", max(now - prev, 0.0))
+            self._emit_clock[r.rid] = now
+        for mark in self.cluster.take_recovery_marks():
+            t.observe("cluster.recovery_s", max(now - mark, 0.0))
 
     # ------------------------------------------------------------------
     # fault-injection plumbing (shared by both serving loops)
@@ -172,7 +221,10 @@ class ServingEngine:
         report = EngineReport(tokens={r.rid: r.tokens for r in requests})
         inj, prev = self._install_faults(fail_at, fault_plan, fault_injector,
                                          report)
+        tele, tele_created = self._install_telemetry()
+        self._emit_clock = {}
         gstep = 0
+        slot_rounds = slot_busy = 0   # microbatch-slot occupancy -> bubbles
 
         def active_ids() -> List[int]:
             return [s.mb for s in slots if s is not None]
@@ -182,35 +234,45 @@ class ServingEngine:
                 for q in range(depth):
                     if slots[q] is None and queue:
                         slots[q] = queue.pop(0)
-                for q in range(depth):
-                    mb = slots[q]
-                    if mb is None:
-                        continue
-                    gstep += 1
-                    # --- scheduled control events ---------------------------
-                    faults.fire("engine.step", tag=f"mb{mb.mb}")
-                    if gstep in migrate_at:
-                        res = self.cluster.migrate_worker(
-                            migrate_at.pop(gstep), active_ids())
-                        report.recoveries += 1
-                        self._apply_resume(res, slots, report)
-                    if gstep in repartition_at:
-                        self.cluster.repartition(repartition_at.pop(gstep),
-                                                 active_ids())
+                slot_rounds += depth
+                slot_busy += sum(s is not None for s in slots)
+                with telemetry.span("round"):
+                    for q in range(depth):
+                        mb = slots[q]
+                        if mb is None:
+                            continue
+                        gstep += 1
+                        # --- scheduled control events -----------------------
+                        faults.fire("engine.step", tag=f"mb{mb.mb}")
+                        if gstep in migrate_at:
+                            res = self.cluster.migrate_worker(
+                                migrate_at.pop(gstep), active_ids())
+                            report.recoveries += 1
+                            self._apply_resume(res, slots, report)
+                        if gstep in repartition_at:
+                            self.cluster.repartition(
+                                repartition_at.pop(gstep), active_ids())
 
-                    # --- advance this slot one step --------------------------
-                    try:
-                        self._advance(mb, report)
-                    except RuntimeError:
-                        # a dead worker was hit mid-pipeline: detect + recover
-                        resume = self.cluster.detect_and_recover(active_ids())
-                        report.recoveries += 1
-                        self._apply_resume(resume, slots, report)
-                        self._advance(mb, report)  # re-execute this slot's step
-                    if mb.done:
-                        slots[q] = None
+                        # --- advance this slot one step ---------------------
+                        try:
+                            self._advance(mb, report)
+                        except RuntimeError:
+                            # dead worker hit mid-pipeline: detect + recover
+                            resume = self.cluster.detect_and_recover(
+                                active_ids())
+                            report.recoveries += 1
+                            self._apply_resume(resume, slots, report)
+                            self._advance(mb, report)  # re-execute the step
+                        if mb.done:
+                            slots[q] = None
         finally:
+            # empty microbatch slots ARE the pipeline bubbles of the paper's
+            # joint/FasterTransformer setting (slots drain at the speed of
+            # their slowest member)
+            tele.gauge("engine.bubble_frac",
+                       1.0 - slot_busy / slot_rounds if slot_rounds else 0.0)
             self._teardown_faults(inj, prev, report)
+            self._teardown_telemetry(tele, tele_created, report)
         report.peak_kv_bytes = self.cluster.kv_bytes_peak
         return report
 
@@ -258,26 +320,38 @@ class ServingEngine:
         report = EngineReport(tokens={r.rid: r.tokens for r in requests})
         inj, prev = self._install_faults(fail_at, fault_plan, fault_injector,
                                          report)
+        tele, tele_created = self._install_telemetry()
+        self._emit_clock = {}
+        clock0 = tele.clock_s
         fused = cl.fused_ok
         try:
             while sched.pending():
                 cl.round_prefill_model_s = 0.0
                 self._round_decodes = 0
                 self._round_passes = 0
-                plan = sched.plan_round(
-                    lambda r: self._advance_seq(r, sched, report))
-                report.batch_trace.append(plan.n_active)
-                if fused:
-                    self._execute_round_fused(plan, sched, report)
-                else:
-                    self._execute_round(plan, sched, report)
-                # --- retire finished sequences (blocks free immediately) ----
-                sched.retire()
+                with telemetry.span("round"):
+                    plan = sched.plan_round(
+                        lambda r: self._advance_seq(r, sched, report))
+                    report.batch_trace.append(plan.n_active)
+                    if fused:
+                        self._execute_round_fused(plan, sched, report)
+                    else:
+                        self._execute_round(plan, sched, report)
+                    # --- retire finished sequences (blocks free at once) ----
+                    sched.retire()
                 if self._round_decodes:
                     report.prefill_stall_trace.append(cl.round_prefill_model_s)
                 report.pass_trace.append(self._round_passes)
         finally:
+            # bubble fraction: share of the run's modeled time that decodes
+            # spent stalled behind co-scheduled prefill passes (chunked
+            # prefill exists to bound exactly this)
+            busy = tele.clock_s - clock0
+            stall = sum(report.prefill_stall_trace)
+            tele.gauge("engine.bubble_frac",
+                       stall / busy if busy > 0.0 else 0.0)
             self._teardown_faults(inj, prev, report)
+            self._teardown_telemetry(tele, tele_created, report)
         report.peak_kv_bytes = cl.kv_bytes_peak
         report.prefill_tokens_total = cl.prefill_tokens_total
         report.prefill_tokens_saved = cl.prefill_tokens_saved
@@ -529,8 +603,7 @@ class ServingEngine:
         if mb.next_step >= mb.n_new:
             mb.done = True
 
-    @staticmethod
-    def _emit(mb: Microbatch, tok: np.ndarray, i: int) -> None:
+    def _emit(self, mb: Microbatch, tok: np.ndarray, i: int) -> None:
         for b, r in enumerate(mb.requests):
             if len(r.tokens) == i:
                 r.tokens.append(int(tok[b]))
@@ -538,6 +611,7 @@ class ServingEngine:
                 r.tokens[i] = int(tok[b])
             if r.eos_id is not None and int(tok[b]) == r.eos_id:
                 r.done = True
+        self._tele_emit(mb.requests, i)
 
     def _apply_resume(self, resume: Dict[int, int],
                       slots: List[Optional[Microbatch]],

@@ -20,6 +20,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, Iterable, List, Optional
 
+from repro.core import telemetry
 from repro.serving.request import Request
 
 
@@ -90,12 +91,17 @@ class RoundScheduler:
                 cl.can_resume(self.preempted[0].rid, len(self.active)):
             r = self.preempted.popleft()
             cl.resume_seq(r.rid)
+            telemetry.count("engine.resumed")
             self._activate(r)
         while self.queue and len(self.active) < self.max_active and \
                 cl.can_admit(self.queue[0].prompt_len, len(self.active),
                              token_ids=(self.queue[0].prompt if cl.tiered
                                         else None)):
             r = self.queue.popleft()
+            # queue wait: request arrival -> admission, on the modeled clock
+            telemetry.observe("engine.queue_wait_s",
+                              max(telemetry.clock() - r.arrival, 0.0))
+            telemetry.count("engine.admitted")
             first_step(r)
             self._activate(r)
         if not self.active:
@@ -124,6 +130,7 @@ class RoundScheduler:
         self.active = [a for a in self.active if a.rid != victim.rid]
         self._active_ids.discard(victim.rid)
         self.preempted.append(victim)
+        telemetry.count("engine.preemptions")
 
     def retire(self) -> List[Request]:
         """End of round: finished sequences return their blocks immediately

@@ -1,0 +1,127 @@
+"""Benchmark-trend gate (tools/check_bench_trend.py): pass, synthetic
+regression, missing-metric, module-absent skip, --update re-baselining,
+and the three direction semantics."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_TOOL = os.path.join(os.path.dirname(__file__), "..", "tools",
+                     "check_bench_trend.py")
+_spec = importlib.util.spec_from_file_location("check_bench_trend", _TOOL)
+cbt = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cbt)
+
+
+def _write_run(run_dir, module, metrics):
+    """One repro.bench/v1 artifact with emit_metric-style rows."""
+    os.makedirs(run_dir, exist_ok=True)
+    doc = {"schema": "repro.bench/v1",
+           "rows": ([{"name": "legacy_row", "us_per_call": 1.0, "derived": ""}]
+                    + [{"name": k, "value": v, "note": ""}
+                       for k, v in metrics.items()]),
+           "telemetry": None}
+    with open(os.path.join(run_dir, f"{module}.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def _write_baseline(path, metrics):
+    with open(path, "w") as f:
+        json.dump({"schema": "repro.bench_baseline/v1", "metrics": metrics}, f)
+
+
+def test_pass_within_tolerance(tmp_path):
+    run = str(tmp_path / "run")
+    _write_run(run, "mod", {"m": 1.02})
+    base = str(tmp_path / "base.json")
+    _write_baseline(base, {"mod/m": {"value": 1.0, "rel_tol": 0.05,
+                                     "direction": "two_sided"}})
+    assert cbt.main([run, "--baseline", base]) == 0
+
+
+def test_synthetic_regression_fails(tmp_path):
+    """The acceptance row: a regressed metric must exit non-zero."""
+    run = str(tmp_path / "run")
+    _write_run(run, "mod", {"m": 0.80})          # -20% vs baseline
+    base = str(tmp_path / "base.json")
+    _write_baseline(base, {"mod/m": {"value": 1.0, "rel_tol": 0.05,
+                                     "direction": "two_sided"}})
+    assert cbt.main([run, "--baseline", base]) == 1
+
+
+def test_missing_metric_in_present_module_fails(tmp_path):
+    """The module ran but its emit_metric row vanished: failure, not skip."""
+    run = str(tmp_path / "run")
+    _write_run(run, "mod", {"other": 1.0})
+    base = str(tmp_path / "base.json")
+    _write_baseline(base, {"mod/m": {"value": 1.0}})
+    assert cbt.main([run, "--baseline", base]) == 1
+
+
+def test_absent_module_skips(tmp_path):
+    """Fast-suite runs a subset: metrics of modules that didn't run skip."""
+    run = str(tmp_path / "run")
+    _write_run(run, "ran", {"m": 1.0})
+    base = str(tmp_path / "base.json")
+    _write_baseline(base, {"ran/m": {"value": 1.0},
+                           "didnotrun/m": {"value": 42.0}})
+    assert cbt.main([run, "--baseline", base]) == 0
+
+
+def test_nan_never_passes(tmp_path):
+    run = str(tmp_path / "run")
+    _write_run(run, "mod", {"m": float("nan")})
+    base = str(tmp_path / "base.json")
+    _write_baseline(base, {"mod/m": {"value": 1.0}})
+    assert cbt.main([run, "--baseline", base]) == 1
+
+
+@pytest.mark.parametrize("direction,measured,ok", [
+    ("higher_better", 1.20, True),    # improvement never fails
+    ("higher_better", 0.94, False),   # below the 5% floor
+    ("lower_better", 0.80, True),
+    ("lower_better", 1.06, False),
+    ("two_sided", 1.04, True),
+    ("two_sided", 1.06, False),
+])
+def test_direction_semantics(direction, measured, ok):
+    got, _ = cbt.check_metric(
+        "k", measured, {"value": 1.0, "rel_tol": 0.05, "direction": direction})
+    assert got is ok
+
+
+def test_update_rebaselines_and_keeps_tolerances(tmp_path):
+    run = str(tmp_path / "run")
+    _write_run(run, "mod", {"m": 2.0, "new_metric": 7.0})
+    base = str(tmp_path / "base.json")
+    _write_baseline(base, {
+        "mod/m": {"value": 1.0, "rel_tol": 0.10, "direction": "higher_better"},
+        "absent_mod/x": {"value": 3.0}})
+    assert cbt.main([run, "--baseline", base, "--update"]) == 0
+    doc = cbt.load_baseline(base)
+    m = doc["metrics"]
+    assert m["mod/m"]["value"] == 2.0
+    assert m["mod/m"]["rel_tol"] == 0.10            # tolerance survives
+    assert m["mod/m"]["direction"] == "higher_better"
+    assert m["absent_mod/x"]["value"] == 3.0        # unmeasured entry kept
+    assert m["mod/new_metric"]["value"] == 7.0      # new metric at defaults
+    assert cbt.main([run, "--baseline", base]) == 0
+
+
+def test_bad_schema_and_missing_dir_are_usage_errors(tmp_path):
+    base = str(tmp_path / "base.json")
+    with open(base, "w") as f:
+        json.dump({"schema": "wrong/v0", "metrics": {}}, f)
+    run = str(tmp_path / "run")
+    _write_run(run, "mod", {"m": 1.0})
+    assert cbt.main([run, "--baseline", base]) == 2
+    assert cbt.main([str(tmp_path / "nope"), "--baseline", base]) == 2
+
+
+def test_committed_baseline_is_loadable():
+    """The repo's committed baseline must parse under the current schema."""
+    doc = cbt.load_baseline(cbt.DEFAULT_BASELINE)
+    assert doc["metrics"], "committed baseline has no metrics"
+    for key, spec in doc["metrics"].items():
+        assert "/" in key and "value" in spec

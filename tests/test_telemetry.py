@@ -1,0 +1,266 @@
+"""Unified telemetry layer (repro.core.telemetry): instrument semantics,
+snapshot stability, byte-identical determinism across identical serving
+runs, and per-mode coverage of the required SLO instruments."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry
+from repro.core.dejavulib import faults
+
+# ---------------------------------------------------------------------------
+# unit level: instruments
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_labels():
+    t = telemetry.Telemetry()
+    t.count("c", 2, kind="net")
+    t.count("c", 3, kind="net")
+    t.count("c", 1, kind="ici")
+    t.gauge("g", 0.5)
+    t.gauge("g", 0.25)                       # last write wins
+    snap = t.snapshot()
+    assert snap["schema"] == telemetry.SCHEMA
+    assert snap["counters"] == {"c{kind=ici}": 1, "c{kind=net}": 5}
+    assert snap["gauges"] == {"g": 0.25}
+
+
+def test_label_key_is_sorted():
+    assert telemetry._label_key("n", {"b": 1, "a": 2}) == "n{a=2,b=1}"
+
+
+def test_count_time_integer_ns():
+    t = telemetry.Telemetry()
+    # float-accumulation would drift with ordering; ns-ints cannot
+    for _ in range(1000):
+        t.count_time("t_ns", 0.1e-6)
+    assert t.snapshot()["counters"]["t_ns"] == 1000 * 100
+
+
+def test_histogram_quantiles_and_bounds():
+    h = telemetry.Histogram()
+    assert h.quantile(0.5) == 0.0            # empty
+    vals = [1e-5, 2e-5, 3e-5, 4e-5, 1e-3]
+    for v in vals:
+        h.observe(v)
+    assert h.count == len(vals)
+    assert h.min == 1e-5 and h.max == 1e-3
+    # quantiles are deterministic, clamped to [min, max], monotone
+    q = [h.quantile(x) for x in (0.5, 0.9, 0.99)]
+    assert all(h.min <= v <= h.max for v in q)
+    assert q[0] <= q[1] <= q[2]
+    h2 = telemetry.Histogram()
+    h2.observe(1e9)                          # above the last edge: overflow
+    assert h2.counts[-1] == 1
+    assert h2.quantile(0.99) == 1e9          # clamped to max
+
+
+def test_span_nesting_paths_and_tags():
+    t = telemetry.Telemetry()
+    with t.span("round"):
+        t.advance(1.0)
+        with t.span("pass", kind="fused_decode"):
+            t.advance(0.25)
+    snap = t.snapshot()["spans"]
+    assert snap["round"]["count"] == 1
+    assert snap["round"]["total_s"] == pytest.approx(1.25)
+    inner = snap["round/pass[kind=fused_decode]"]
+    assert inner["count"] == 1
+    assert inner["total_s"] == pytest.approx(0.25)
+
+
+def test_module_helpers_noop_when_uninstalled():
+    assert telemetry.current() is None
+    telemetry.count("x")                     # all must be silent no-ops
+    telemetry.observe("x", 1.0)
+    telemetry.gauge("x", 1.0)
+    telemetry.advance(1.0)
+    assert telemetry.clock() == 0.0
+    with telemetry.span("x"):
+        pass
+
+
+def test_install_uninstall_restores_previous():
+    a = telemetry.Telemetry()
+    prev = telemetry.install(a)
+    assert prev is None
+    b = telemetry.Telemetry()
+    prev = telemetry.install(b)
+    assert prev is a
+    telemetry.uninstall(prev)
+    assert telemetry.current() is a
+    telemetry.uninstall()
+    assert telemetry.current() is None
+
+
+def test_snapshot_json_round_trip_stable_ordering():
+    t = telemetry.Telemetry()
+    t.count("z", 1)
+    t.count("a", 1)
+    t.observe("h", 1e-4)
+    with t.span("s", b=1, a=2):
+        t.advance(0.5)
+    s = t.to_json()
+    doc = json.loads(s)
+    assert json.dumps(doc, sort_keys=True, separators=(",", ":")) == s
+    assert list(doc["counters"]) == ["a", "z"]   # sorted keys survive
+
+
+# ---------------------------------------------------------------------------
+# engine level: determinism + per-mode coverage of required instruments
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.configs.registry import PAPER_ARCHS
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
+                              dtype="float32", num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    return cfg, model, params, prompts
+
+
+def _mkreqs(prompts, max_new=4):
+    from repro.serving import Request
+    return [Request(rid=i, prompt=p.copy(), max_new=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _run_tiered_faulted(served):
+    """One continuous run: fused + tiered + one injected (delay) fault."""
+    from repro.serving import ServingEngine
+    cfg, model, params, prompts = served
+    eng = ServingEngine(cfg, model, params, 2, paged=True, tiered=True,
+                        kv_pool_blocks=128, host_cache_blocks=16,
+                        ssd_cache_blocks=32)
+    plan = faults.FaultPlan([faults.FaultSpec(
+        "stream.task", nth=2, kind="delay", delay_s=1e-3)])
+    rep = eng.run_continuous(_mkreqs(prompts), max_active=2, fault_plan=plan)
+    assert rep.fault_trace, "the injected fault never fired"
+    return rep
+
+
+def test_determinism_byte_identical_snapshots(served):
+    """Two identical runs (fused + tiered + one injected fault) must produce
+    byte-identical telemetry JSON — the module's headline guarantee."""
+    a = _run_tiered_faulted(served)
+    b = _run_tiered_faulted(served)
+    ja = json.dumps(a.telemetry, sort_keys=True, separators=(",", ":"))
+    jb = json.dumps(b.telemetry, sort_keys=True, separators=(",", ":"))
+    assert ja == jb
+    assert a.telemetry["schema"] == telemetry.SCHEMA
+
+
+def test_tiered_run_populates_tier_and_fault_instruments(served):
+    rep = _run_tiered_faulted(served)
+    tele = rep.telemetry
+    assert tele["counters"]["faults.fired{kind=delay,point=stream.task}"] == 1
+    # tiered serving moved blocks: tier counters + stream/transport activity
+    assert any(k.startswith("tier.") for k in tele["counters"])
+    assert tele["counters"]["stream.tasks_submitted"] > 0
+    assert any(k.startswith("transport.bytes{") for k in tele["counters"])
+
+
+def _required_slo_keys(tele, max_new):
+    assert tele["schema"] == telemetry.SCHEMA
+    assert tele["histograms"]["engine.ttft_s"]["count"] >= 1
+    if max_new > 1:
+        it = tele["histograms"]["engine.inter_token_s"]
+        assert it["count"] >= 1
+        assert it["p50_s"] <= it["p99_s"]
+    assert "engine.bubble_frac" in tele["gauges"]
+    assert any(k.startswith("pass") or "/pass" in k for k in tele["spans"])
+
+
+def test_mode_coverage_perseq_and_fused(served):
+    """run_continuous, per-seq oracle vs fused rounds: both snapshots carry
+    the SLO histograms; replication makes transport bytes flow."""
+    from repro.serving import ServingEngine
+    cfg, model, params, prompts = served
+    for fused in (False, True):
+        eng = ServingEngine(cfg, model, params, 2, paged=True,
+                            kv_pool_blocks=128, replication=True,
+                            fused_rounds=fused)
+        rep = eng.run_continuous(_mkreqs(prompts), max_active=3)
+        tele = rep.telemetry
+        _required_slo_keys(tele, 4)
+        assert any(k.startswith("transport.bytes{") for k in tele["counters"])
+        kind = "fused_decode" if fused else "perseq_decode"
+        assert any(f"kind={kind}" in k for k in tele["spans"]), \
+            f"no {kind} pass span in {sorted(tele['spans'])}"
+
+
+def test_mode_coverage_disagg_and_swap(served):
+    """run() in disaggregated and swapping modes: SLO keys + per-link bytes
+    (disagg streams prompt KV; swapping moves microbatch KV to host)."""
+    from repro.serving import ServingEngine
+    cfg, model, params, prompts = served
+    eng = ServingEngine(cfg, model, params, 2, mode="disaggregated",
+                        dp_split=(1, 1), microbatch=2)
+    rep = eng.run(_mkreqs(prompts))
+    _required_slo_keys(rep.telemetry, 4)
+    assert any(k.startswith("transport.bytes{")
+               for k in rep.telemetry["counters"])
+
+    eng = ServingEngine(cfg, model, params, 2, microbatch=2, swapping=True)
+    rep = eng.run(_mkreqs(prompts))
+    _required_slo_keys(rep.telemetry, 4)
+    assert any(k.startswith("transport.bytes{")
+               for k in rep.telemetry["counters"])
+
+
+def test_recovery_span_populated_on_failure(served):
+    """fail_at -> cluster.recovery_s histogram: the time from the injected
+    failure to the first post-restore token on the modeled clock."""
+    from repro.serving import ServingEngine
+    cfg, model, params, prompts = served
+    eng = ServingEngine(cfg, model, params, 2, microbatch=2,
+                        replication=True)
+    rep = eng.run(_mkreqs(prompts), fail_at={3: 1})
+    assert rep.recoveries == 1
+    rec = rep.telemetry["histograms"]["cluster.recovery_s"]
+    assert rec["count"] >= 1
+    assert rec["max_s"] < 60.0
+    assert rep.telemetry["counters"]["cluster.failures"] == 1
+
+
+def test_ambient_registry_aggregates_and_is_reused(served):
+    """With an ambient registry installed (the benchmarks' pattern), runs
+    aggregate into it and the engine does NOT uninstall it."""
+    from repro.serving import ServingEngine
+    cfg, model, params, prompts = served
+    amb = telemetry.Telemetry()
+    telemetry.install(amb)
+    try:
+        eng = ServingEngine(cfg, model, params, 2, paged=True,
+                            kv_pool_blocks=128)
+        r1 = eng.run_continuous(_mkreqs(prompts), max_active=3)
+        assert telemetry.current() is amb
+        c1 = r1.telemetry["histograms"]["engine.ttft_s"]["count"]
+        r2 = eng.run_continuous(_mkreqs(prompts), max_active=3)
+        c2 = r2.telemetry["histograms"]["engine.ttft_s"]["count"]
+        assert c2 == 2 * c1                  # cumulative across runs
+    finally:
+        telemetry.uninstall()
+
+
+def test_queue_wait_and_admission_counters(served):
+    """max_active=1 forces queueing: admissions counted, waits observed."""
+    from repro.serving import ServingEngine
+    cfg, model, params, prompts = served
+    eng = ServingEngine(cfg, model, params, 2, paged=True,
+                        kv_pool_blocks=128)
+    rep = eng.run_continuous(_mkreqs(prompts), max_active=1)
+    tele = rep.telemetry
+    assert tele["counters"]["engine.admitted"] == len(prompts)
+    qw = tele["histograms"]["engine.queue_wait_s"]
+    assert qw["count"] == len(prompts)
+    assert qw["max_s"] > 0.0                 # later requests waited

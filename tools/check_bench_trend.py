@@ -1,0 +1,182 @@
+#!/usr/bin/env python
+"""Benchmark-trend gate: compare ``emit_metric`` rows against a baseline.
+
+Reads every ``repro.bench/v1`` artifact in a directory (the
+``BENCH_JSON_DIR`` a benchmark run just wrote) and compares each NUMERIC
+row — the ones emitted via ``benchmarks.common.emit_metric`` — against the
+committed baseline ``benchmarks/baselines/BENCH_baseline.json``
+(``repro.bench_baseline/v1``)::
+
+    {"schema": "repro.bench_baseline/v1",
+     "metrics": {"<module-stem>/<row-name>":
+                 {"value": <float>, "rel_tol": <float>,
+                  "direction": "higher_better"|"lower_better"|"two_sided"}}}
+
+Semantics, per metric:
+
+- ``higher_better``: fail when measured < baseline * (1 - rel_tol)
+  (improvements never fail; re-baseline to ratchet).
+- ``lower_better``:  fail when measured > baseline * (1 + rel_tol)
+- ``two_sided``:     fail when |measured - baseline| > |baseline| * rel_tol
+
+Modules whose JSON artifact is absent from the run directory are skipped
+(fast-suite CI only runs a subset), but a baseline metric whose module
+artifact IS present must appear in it — a silently dropped metric is a
+failure, not a skip.  New metrics not in the baseline are reported as
+informational (add them by re-baselining).
+
+Re-baselining (after an intentional perf/model change)::
+
+    BENCH_JSON_DIR=bench-json python -m benchmarks.run
+    python tools/check_bench_trend.py bench-json --update
+    git add benchmarks/baselines/BENCH_baseline.json
+
+Exit codes: 0 ok, 1 regression/missing metric, 2 usage or schema error.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+BASELINE_SCHEMA = "repro.bench_baseline/v1"
+BENCH_SCHEMA = "repro.bench/v1"
+DEFAULT_REL_TOL = 0.05
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "baselines", "BENCH_baseline.json")
+DIRECTIONS = ("higher_better", "lower_better", "two_sided")
+
+
+def load_run_metrics(run_dir: str):
+    """``{"<module-stem>/<row-name>": value}`` over every artifact in
+    `run_dir`, plus the set of module stems that produced an artifact."""
+    metrics, modules = {}, set()
+    for path in sorted(glob.glob(os.path.join(run_dir, "*.json"))):
+        stem = os.path.splitext(os.path.basename(path))[0]
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+        if not isinstance(doc, dict) or doc.get("schema") != BENCH_SCHEMA:
+            continue                      # foreign JSON in the dir; ignore
+        modules.add(stem)
+        for row in doc.get("rows", ()):
+            if "value" in row:            # emit_metric rows only
+                metrics[f"{stem}/{row['name']}"] = float(row["value"])
+    return metrics, modules
+
+
+def load_baseline(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"{path}: expected schema {BASELINE_SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    for key, spec in doc.get("metrics", {}).items():
+        if spec.get("direction", "two_sided") not in DIRECTIONS:
+            raise ValueError(f"{path}: metric {key!r} has unknown direction "
+                             f"{spec.get('direction')!r}")
+    return doc
+
+
+def check_metric(key: str, measured: float, spec: dict):
+    """Return (ok, detail-string) for one baseline entry."""
+    base = float(spec["value"])
+    tol = float(spec.get("rel_tol", DEFAULT_REL_TOL))
+    direction = spec.get("direction", "two_sided")
+    if measured != measured:              # NaN never passes
+        return False, f"{key}: measured NaN (baseline {base:g})"
+    if direction == "higher_better":
+        floor = base * (1.0 - tol)
+        ok = measured >= floor
+        detail = f"{key}: {measured:g} < floor {floor:g} (baseline {base:g})"
+    elif direction == "lower_better":
+        ceil = base * (1.0 + tol)
+        ok = measured <= ceil
+        detail = f"{key}: {measured:g} > ceiling {ceil:g} (baseline {base:g})"
+    else:
+        ok = abs(measured - base) <= abs(base) * tol
+        detail = (f"{key}: {measured:g} outside +/-{tol:.0%} "
+                  f"of baseline {base:g}")
+    return ok, detail
+
+
+def update_baseline(path: str, metrics: dict, prev: dict) -> dict:
+    """Refresh values for measured metrics; keep tolerances/directions and
+    entries for modules that did not run; add new metrics at defaults."""
+    out = {k: dict(v) for k, v in prev.get("metrics", {}).items()}
+    for key, value in metrics.items():
+        spec = out.setdefault(
+            key, {"rel_tol": DEFAULT_REL_TOL, "direction": "two_sided"})
+        spec["value"] = value
+    return {"schema": BASELINE_SCHEMA, "metrics": out}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("run_dir", help="directory of repro.bench/v1 artifacts "
+                    "(a benchmark run's BENCH_JSON_DIR)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run instead of "
+                    "checking against it")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.run_dir):
+        print(f"check_bench_trend: run dir {args.run_dir!r} does not exist",
+              file=sys.stderr)
+        return 2
+    metrics, modules = load_run_metrics(args.run_dir)
+
+    if args.update:
+        prev = {}
+        if os.path.exists(args.baseline):
+            try:
+                prev = load_baseline(args.baseline)
+            except ValueError as e:
+                print(f"check_bench_trend: {e}", file=sys.stderr)
+                return 2
+        doc = update_baseline(args.baseline, metrics, prev)
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"check_bench_trend: baseline updated with "
+              f"{len(metrics)} metric(s) -> {args.baseline}")
+        return 0
+
+    try:
+        baseline = load_baseline(args.baseline)
+    except (OSError, ValueError) as e:
+        print(f"check_bench_trend: cannot load baseline: {e}",
+              file=sys.stderr)
+        return 2
+
+    failures, checked, skipped = [], 0, 0
+    for key, spec in sorted(baseline["metrics"].items()):
+        stem = key.split("/", 1)[0]
+        if stem not in modules:
+            skipped += 1                  # module did not run in this suite
+            continue
+        if key not in metrics:
+            failures.append(f"{key}: metric missing from {stem}.json "
+                            f"(module ran; was the emit_metric row removed?)")
+            continue
+        checked += 1
+        ok, detail = check_metric(key, metrics[key], spec)
+        if not ok:
+            failures.append(detail)
+    new = sorted(k for k in metrics if k not in baseline["metrics"])
+    if new:
+        print(f"check_bench_trend: {len(new)} metric(s) not in baseline "
+              f"(informational): {', '.join(new)}")
+    for f_ in failures:
+        print(f"REGRESSION {f_}", file=sys.stderr)
+    print(f"check_bench_trend: {checked} checked, {skipped} skipped "
+          f"(module absent), {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
