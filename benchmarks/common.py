@@ -32,6 +32,7 @@ import time
 from repro.core import telemetry
 
 _ROWS: list = []
+_FLUSHED: set = set()   # stems written this process (double-flush guard)
 
 if os.environ.get("BENCH_JSON_DIR") and telemetry.current() is None:
     telemetry.install(telemetry.Telemetry())
@@ -70,6 +71,14 @@ def flush_json(name: str) -> None:
         return
     if not _ROWS:
         return
+    if name in _FLUSHED:
+        # a second flush would silently overwrite the artifact (rows and
+        # telemetry already cleared), corrupting the CI trend input —
+        # error out rather than lose the first flush's numbers
+        raise RuntimeError(
+            f"flush_json({name!r}): artifact already written this process; "
+            "a module must flush each stem at most once")
+    _FLUSHED.add(name)
     tele = telemetry.current()
     doc = {
         "schema": "repro.bench/v1",

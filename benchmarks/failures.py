@@ -10,6 +10,8 @@ recovery work (steps redone) stays at the replication lag.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import jax
 import numpy as np
@@ -17,9 +19,11 @@ import numpy as np
 from benchmarks.common import emit, emit_metric
 from repro.configs.registry import PAPER_ARCHS
 from repro.core import costmodel as cm
+from repro.core import exporters, telemetry, tracing
 from repro.core.simulator import failure_latency
 from repro.models import build_model
 from repro.serving import Request, ServingEngine
+from tools import trace_report
 
 
 def run() -> None:
@@ -83,6 +87,56 @@ def run() -> None:
                 "fail -> first post-restore token, modeled clock")
     assert rec["max_s"] < 60.0, \
         f"recovery time {rec['max_s']:.1f}s unbounded on the modeled clock"
+
+    _export_trace_artifacts(rcfg, model, params, prompts)
+
+
+def _export_trace_artifacts(rcfg, model, params, prompts) -> None:
+    """Flight-recorder export: run the continuous-batching engine with a
+    tracer installed and an injected worker death, and write the raw
+    ``repro.trace/v1`` dump plus its Perfetto and Prometheus renderings
+    into ``$BENCH_JSON_DIR``.  CI uploads these as workflow artifacts and
+    gates ``tools/trace_report.py --assert`` on the dump; without
+    ``BENCH_JSON_DIR`` only the coverage row is emitted."""
+    tracer = tracing.Tracer()
+    prev_trace = tracing.install(tracer)
+    tele = telemetry.Telemetry()
+    prev_tele = telemetry.install(tele)
+    try:
+        eng = ServingEngine(rcfg, model, params, 2, paged=True, tiered=True,
+                            kv_pool_blocks=128, host_cache_blocks=16,
+                            ssd_cache_blocks=32, replication=True)
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new=6)
+                for i in range(4)]
+        rep = eng.run_continuous(reqs, max_active=2, fail_at={5: 1})
+        assert rep.recoveries == 1, \
+            f"traced run: expected 1 recovery, got {rep.recoveries}"
+        trace_json = tracer.to_json()
+        trace = json.loads(trace_json)
+        snapshot = tele.snapshot()
+    finally:
+        telemetry.uninstall(prev_tele)
+        tracing.uninstall(prev_trace)
+
+    report = trace_report.analyze(trace)
+    cov = min(r["coverage"] for r in report["requests"].values())
+    emit_metric("failures_trace_min_coverage", cov,
+                "min per-request named-phase coverage of the traced run")
+    assert cov >= 0.95, f"traced run coverage {cov:.4f} < 0.95"
+
+    out_dir = os.environ.get("BENCH_JSON_DIR")
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "failures_trace.json"), "w",
+              encoding="utf-8") as f:
+        f.write(trace_json)
+    with open(os.path.join(out_dir, "failures_trace.perfetto.json"), "w",
+              encoding="utf-8") as f:
+        f.write(exporters.dumps(exporters.trace_to_perfetto(trace)))
+    with open(os.path.join(out_dir, "failures_prometheus.prom"), "w",
+              encoding="utf-8") as f:
+        f.write(exporters.telemetry_to_prometheus(snapshot))
 
 
 if __name__ == "__main__":

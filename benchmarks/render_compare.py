@@ -1,7 +1,14 @@
-"""Render the baseline → optimized comparison table for EXPERIMENTS.md."""
+"""Render the baseline → optimized comparison table for EXPERIMENTS.md.
+
+With two DIRECTORY arguments, compares the SLO percentiles of matching
+``repro.bench/v1`` artifacts — read from each artifact's embedded
+``repro.telemetry/v1`` snapshot (the CI-gated numbers), never recomputed
+from raw trace lists.
+"""
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -41,5 +48,42 @@ def main(base_path="results/dryrun_baseline.json",
               f"(max {max(sps):.1f}×, min {min(sps):.2f}×)")
 
 
+def _bench_histograms(path):
+    """{artifact_stem: {metric: hist}} for every repro.bench/v1 file."""
+    out = {}
+    for fn in sorted(os.listdir(path)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(path, fn)) as f:
+            try:
+                doc = json.load(f)
+            except ValueError:
+                continue
+        if not isinstance(doc, dict) or doc.get("schema") != "repro.bench/v1":
+            continue
+        tele = doc.get("telemetry") or {}
+        if tele.get("schema") == "repro.telemetry/v1":
+            out[fn[:-5]] = tele.get("histograms", {})
+    return out
+
+
+def compare_bench_dirs(base_dir, new_dir):
+    base, new = _bench_histograms(base_dir), _bench_histograms(new_dir)
+    rows = ["| artifact | metric | p50 (base → new) | p99 (base → new) | Δp99 |",
+            "|---|---|---|---|---|"]
+    for stem in sorted(set(base) & set(new)):
+        for key in sorted(set(base[stem]) & set(new[stem])):
+            hb, hn = base[stem][key], new[stem][key]
+            d = (hn["p99_s"] / hb["p99_s"] - 1.0) if hb["p99_s"] else 0.0
+            rows.append(
+                f"| {stem} | {key} | {hb['p50_s']:.3e} → {hn['p50_s']:.3e} "
+                f"| {hb['p99_s']:.3e} → {hn['p99_s']:.3e} | {d:+.1%} |")
+    print("\n".join(rows))
+
+
 if __name__ == "__main__":
-    main(*sys.argv[1:])
+    if (len(sys.argv) == 3 and os.path.isdir(sys.argv[1])
+            and os.path.isdir(sys.argv[2])):
+        compare_bench_dirs(sys.argv[1], sys.argv[2])
+    else:
+        main(*sys.argv[1:])

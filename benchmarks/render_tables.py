@@ -1,4 +1,13 @@
-"""Render EXPERIMENTS.md tables from dry-run JSON artifacts."""
+"""Render EXPERIMENTS.md tables from dry-run JSON artifacts, and SLO
+percentile tables from ``repro.bench/v1`` artifacts.
+
+With a directory argument, every ``*.json`` in it that carries the
+``repro.bench/v1`` schema is rendered as an SLO table whose p50/p90/p99
+come straight from the EMBEDDED ``repro.telemetry/v1`` snapshot — the
+same numbers ``tools/check_bench_trend.py`` gates on — never recomputed
+from raw trace lists (which used different interpolation and could
+disagree with CI).
+"""
 from __future__ import annotations
 
 import json
@@ -37,9 +46,50 @@ def render(path, title):
     return "\n".join(out)
 
 
+def slo_rows(doc):
+    """Percentile rows from a ``repro.bench/v1`` artifact's embedded
+    telemetry snapshot (the CI-gated numbers; never recomputed)."""
+    tele = doc.get("telemetry")
+    if not tele or tele.get("schema") != "repro.telemetry/v1":
+        return []
+    out = []
+    for key, h in sorted(tele.get("histograms", {}).items()):
+        out.append((key, h["count"], h["p50_s"], h["p90_s"], h["p99_s"],
+                    h["max_s"]))
+    return out
+
+
+def render_bench_dir(path):
+    out = []
+    for fn in sorted(os.listdir(path)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(path, fn)) as f:
+            try:
+                doc = json.load(f)
+            except ValueError:
+                continue
+        if not isinstance(doc, dict) or doc.get("schema") != "repro.bench/v1":
+            continue                     # trace dumps etc. live here too
+        rows = slo_rows(doc)
+        if not rows:
+            continue
+        out += [f"### {fn[:-5]} — SLO percentiles (modeled seconds)", "",
+                "| metric | n | p50 | p90 | p99 | max |",
+                "|---|---|---|---|---|---|"]
+        for key, n, p50, p90, p99, mx in rows:
+            out.append(f"| {key} | {n} | {p50:.3e} | {p90:.3e} "
+                       f"| {p99:.3e} | {mx:.3e} |")
+        out.append("")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
-    for path, title in [("results/dryrun_baseline.json", "Baseline (paper-faithful)"),
-                        ("results/dryrun_opt.json", "Optimized (beyond-paper)")]:
-        if os.path.exists(path):
-            print(render(path, title))
-            print()
+    if len(sys.argv) > 1 and os.path.isdir(sys.argv[1]):
+        print(render_bench_dir(sys.argv[1]))
+    else:
+        for path, title in [("results/dryrun_baseline.json", "Baseline (paper-faithful)"),
+                            ("results/dryrun_opt.json", "Optimized (beyond-paper)")]:
+            if os.path.exists(path):
+                print(render(path, title))
+                print()

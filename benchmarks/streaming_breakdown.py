@@ -107,6 +107,26 @@ def run() -> None:
     emit("fig11/transfer_always_corrupt_us", t_corrupt,
          f"integrity check + retransmit ({t_corrupt/t_fast:.2f}x fast path)")
 
+    # flight-recorder gate micro-benchmark: with no tracer installed the
+    # transfer hot path pays exactly one `tracing.active()` is-None check;
+    # with a Tracer installed each transfer also appends one ring-buffer
+    # event.  Same shape as the injector gate above: informational wall
+    # times, not trend-gated.
+    from repro.core import tracing
+    t_trace_off = timeit(lambda: tr.transfer(payload, tag="microbench"),
+                         iters=20, warmup=3)
+    prev = tracing.install(tracing.Tracer())
+    try:
+        t_trace_on = timeit(lambda: tr.transfer(payload, tag="microbench"),
+                            iters=20, warmup=3)
+    finally:
+        tracing.uninstall(prev)
+    emit("fig11/transfer_tracing_off_us", t_trace_off,
+         "no tracer: hot path is a single is-None check")
+    emit("fig11/transfer_tracing_on_us", t_trace_on,
+         f"tracer installed: +1 ring append "
+         f"({t_trace_on/t_trace_off:.2f}x tracing-off)")
+
 
 if __name__ == "__main__":
     run()

@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
 from repro.core import telemetry
+from repro.core import tracing
 from repro.core.controller import Controller
 from repro.core.dejavulib import (NetworkTransport, PipelineTopo, StreamEngine,
                                   faults, stream_in, stream_in_blocks,
@@ -172,7 +173,8 @@ class DejaVuCluster:
         self.mb_pos[mb] = plen
         self.mb_prompt_len[mb] = plen
         self.mb_max_len[mb] = max_len
-        with telemetry.span("pass", kind="mb_prefill"):
+        with telemetry.span("pass", kind="mb_prefill"), \
+                tracing.span("pass", kind="mb_prefill", mb=mb, batch=b):
             x = tokens
             for w in self.prompt_group:
                 x = w.prefill(mb, x, max_len)
@@ -223,7 +225,8 @@ class DejaVuCluster:
         """One decode step through the token pipeline.  Returns logits [B,V].
         `step` is 1-based (step i consumes token_{i-1})."""
         pos = self.mb_pos[mb]
-        with telemetry.span("pass", kind="mb_decode"):
+        with telemetry.span("pass", kind="mb_decode"), \
+                tracing.span("pass", kind="mb_decode", mb=mb, step=step):
             if self.swapping:
                 for w in self.token_group:
                     w.restore(mb)
@@ -375,7 +378,9 @@ class DejaVuCluster:
         None — the engine interleaves decode steps between calls."""
         st = self._pending_prefill[rid]
         plen, pos = st["plen"], st["pos"]
-        with telemetry.span("pass", kind=f"prefill_{st['mode']}"):
+        with telemetry.span("pass", kind=f"prefill_{st['mode']}"), \
+                tracing.span("pass", rid=rid, kind=f"prefill_{st['mode']}",
+                             pos=pos, plen=plen):
             if st["mode"] == "batch":
                 x = jnp.asarray(st["prompt"])[None]
                 for w in self.prompt_group:
@@ -496,7 +501,8 @@ class DejaVuCluster:
         Raises PoolExhausted BEFORE mutating any pool, so the engine can
         preempt a victim and retry."""
         pos = self.seq_len[rid]
-        with telemetry.span("pass", kind="perseq_decode"):
+        with telemetry.span("pass", kind="perseq_decode"), \
+                tracing.span("pass", rid=rid, seq=step, kind="perseq_decode"):
             if self.swapping:
                 for w in self.token_group:
                     w.paged_restore(rid)
@@ -540,7 +546,8 @@ class DejaVuCluster:
         tokens: [B] int32 (each sequence's last sampled token); steps:
         per-sequence 1-based decode step.  Returns logits [B,V]."""
         poses = [self.seq_len[rid] for rid in rids]
-        with telemetry.span("pass", kind="fused_decode"):
+        with telemetry.span("pass", kind="fused_decode"), \
+                tracing.span("pass", kind="fused_decode", rids=list(rids)):
             if self.swapping:
                 for w in self.token_group:
                     for rid in rids:
@@ -583,7 +590,8 @@ class DejaVuCluster:
         set's longest and masked inside the pass.  Returns {rid:
         prefill_logits | None}; a completed prompt runs the same post-prefill
         streaming / replication / swap as the per-sequence path."""
-        with telemetry.span("pass", kind="chunkset"):
+        with telemetry.span("pass", kind="chunkset"), \
+                tracing.span("pass", kind="chunkset", rids=list(rids)):
             return self._prefill_chunkset_pass(rids)
 
     def _prefill_chunkset_pass(self, rids: List[int]
@@ -706,6 +714,7 @@ class DejaVuCluster:
         # observability point only — lets a recorded trace (and fault_trace
         # assertions) show every delivered kill, whatever path requested it
         faults.fire("cluster.fail", tag=f"w{wid}")
+        tracing.event("cluster.kill", wid=wid)
         t = telemetry.current()
         if t is not None:
             # mark the modeled clock; the engine closes the mark into a
@@ -730,7 +739,8 @@ class DejaVuCluster:
         dead = self.controller.check_failures()
         resume: Dict[int, int] = {}
         for wid in dead:
-            resume.update(self._recover_worker(wid, active_mbs))
+            with tracing.span("recovery", wid=wid):
+                resume.update(self._recover_worker(wid, active_mbs))
         return resume
 
     def _recover_worker(self, wid: int, active_mbs: List[int]) -> Dict[int, int]:

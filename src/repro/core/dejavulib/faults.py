@@ -68,6 +68,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core import telemetry
+from repro.core import tracing
 
 FAULT_KINDS = ("error", "task_error", "worker_death", "drop", "corrupt",
                "ssd_write", "delay")
@@ -219,6 +220,12 @@ class FaultInjector:
         if spec is None:
             return None
         telemetry.count("faults.fired", 1, kind=spec.kind, point=point)
+        if tracing.active():
+            # every realized fault becomes a trace instant (auto-routed to
+            # the firing thread's track), so failures show up inline in a
+            # flight-recorder dump next to the passes they disrupted
+            tracing.event(f"fault.{spec.kind}", point=point, n=n, tag=tag,
+                          **({} if spec.wid is None else {"wid": spec.wid}))
         # Actions run OUTSIDE the lock: worker_killer may re-enter fire()
         # (inject_failure fires "cluster.fail").
         if spec.kind == "worker_death":

@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 from repro.core import telemetry
+from repro.core import tracing
 from repro.core.dejavulib import faults
 
 
@@ -91,6 +92,13 @@ class StreamEngine:
             telemetry.count("stream.tasks_done")
             telemetry.count_time("stream.model_ns",
                                  task.model_seconds + extra_model)
+            if tracing.active():
+                # non-owner thread: lands on the streamer track at its own
+                # FIFO cursor (never reads the modeled clock)
+                tracing.event("stream.task", tag=task.tag,
+                              dur_ns=int(round(
+                                  (task.model_seconds + extra_model) * 1e9)),
+                              failed=task.error is not None)
             task.done.set()
 
     def submit(self, fn: Callable[[], object], *, model_seconds: float = 0.0,

@@ -20,6 +20,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import telemetry
+from repro.core import tracing
 from repro.core.dejavulib import faults
 from repro.core.dejavulib.buffers import TransferRecord
 
@@ -93,6 +94,12 @@ class Transport:
         telemetry.count_time("transport.model_ns", model, kind=self.kind)
         if attempts > 1:
             telemetry.count("transport.retransmits", 1, kind=self.kind)
+        if tracing.active():
+            # runs on BOTH the serving and the streamer thread; the tracer
+            # routes each to its thread's track with the modeled duration
+            tracing.event("xfer", kind=self.kind, bytes=out.nbytes,
+                          attempts=attempts, tag=tag,
+                          dur_ns=int(round(model * 1e9)))
         return out
 
     @staticmethod

@@ -147,9 +147,21 @@ class Telemetry:
         self._spans: Dict[str, List[float]] = {}
         self._tls = threading.local()
         self.clock_s = 0.0
+        # determinism rule: the modeled clock and spans belong to the
+        # thread that owns the registry (bound here, re-bound by
+        # ``install``); `_check_owner` enforces what PR 7 documented
+        self._owner = threading.get_ident()
+
+    def _check_owner(self, what: str) -> None:
+        if threading.get_ident() != self._owner:
+            raise RuntimeError(
+                f"Telemetry.{what} called from a non-owner thread; the "
+                "modeled clock and spans are serving-thread only — use "
+                "count/count_time (integer-ns) from background threads")
 
     # -- modeled clock (serving thread only) ---------------------------
     def advance(self, dt: float) -> None:
+        self._check_owner("advance")
         if dt > 0.0:
             self.clock_s += dt
 
@@ -191,6 +203,7 @@ class Telemetry:
 
     @contextmanager
     def span(self, name: str, **tags: object) -> Iterator[None]:
+        self._check_owner("span")
         label = name
         if tags:
             label += "[" + ",".join(f"{k}={tags[k]}" for k in sorted(tags)) + "]"
@@ -253,9 +266,11 @@ _ACTIVE: Optional[Telemetry] = None
 
 
 def install(t: Telemetry) -> Optional[Telemetry]:
-    """Install *t* as the process-wide registry; returns the previous one."""
+    """Install *t* as the process-wide registry; returns the previous one.
+    Re-binds the clock/span owner to the installing thread."""
     global _ACTIVE
     prev = _ACTIVE
+    t._owner = threading.get_ident()
     _ACTIVE = t
     return prev
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import telemetry
+from repro.core import tracing
 from repro.core.dejavulib import (HostLinkTransport, HostMemoryStore,
                                   LocalTransport, NetworkTransport,
                                   StreamEngine)
@@ -276,6 +277,7 @@ class StageWorker:
         fault instead).  Without the flush a queued spill would observe the
         post-mortem empty host store and corrupt the tier index."""
         telemetry.count("worker.kills", 1, wid=self.wid)
+        tracing.event("worker.kill", wid=self.wid)
         self.alive = False
         self.kv.clear()
         if (self.tier is not None
@@ -292,15 +294,19 @@ class StageWorker:
         if self.tier is not None:
             self.tier.on_host_failure()
 
-    def _check(self):
+    def _check(self, op: Optional[str] = None, **ids: int):
         if not self.alive:
             raise RuntimeError(f"worker {self.wid} is dead")
         # every stage op (prefill/decode, paged or not) passes through here
         telemetry.count("worker.stage_calls", 1, wid=self.wid)
+        if op is not None and tracing.active():
+            # per-stage timeline: one track per worker, instants at the
+            # modeled clock of the enclosing pass span
+            tracing.event(f"stage.{op}", track=f"w{self.wid}", **ids)
 
     # ------------------------------------------------------------------
     def prefill(self, mb: int, x_or_tokens, max_len: int):
-        self._check()
+        self._check("prefill", mb=mb)
         if self.first:
             x, ks, vs = self._prefill(self.sp, x_or_tokens)
         else:
@@ -314,7 +320,7 @@ class StageWorker:
         return x
 
     def decode(self, mb: int, x_or_token, pos: int):
-        self._check()
+        self._check("decode", mb=mb)
         slot = self.kv[mb]
         x, kc, vc = self._decode(self.sp, x_or_token, slot["k"], slot["v"],
                                  jnp.int32(pos))
@@ -365,7 +371,7 @@ class StageWorker:
     def prefill_paged(self, seq: int, x_or_tokens, token_ids=None):
         """Stage prefill for ONE request (batch 1); KV lands in pool blocks.
         `token_ids` enables prefix-sharing of full prompt blocks."""
-        self._check()
+        self._check("prefill_paged", rid=seq)
         x, ks, vs = self._prefill(self.sp, x_or_tokens)
         s = ks.shape[2]
         _, fresh = self.pool.allocate(seq, s, token_ids=token_ids)
@@ -412,7 +418,7 @@ class StageWorker:
         scatter the chunk's K/V window back into its pages through kv_pack
         (DMA-aligned; the re-written head tokens of the aligned window hold
         identical values).  Requires `ensure_prefill_table` first."""
-        self._check()
+        self._check("prefill_chunk", rid=seq)
         c = int(x_or_tokens.shape[1])
         pad_to = len(self.pool.tables[seq]) * self.pool.block_size
         dense = self.pages.gather_dense(seq, pad_to)
@@ -450,7 +456,7 @@ class StageWorker:
         """One decode step for one sequence: append a slot (CoW if the tail
         block is shared), gather blocks -> dense stage cache, run the jitted
         stage, scatter the new token's K/V back into its block."""
-        self._check()
+        self._check("decode_paged", rid=seq)
         cow = self.pool.append(seq)
         self.pages.apply_cow(cow)
         pad_to = len(self.pool.tables[seq]) * self.pool.block_size
@@ -481,7 +487,7 @@ class StageWorker:
         window back through one multi-sequence ragged buffered copy.  The
         cluster pre-flights pool capacity for the WHOLE batch first, so the
         per-sequence appends here cannot run out mid-batch."""
-        self._check()
+        self._check("decode_batch", n=len(seqs))
         from repro.kernels import ops as kops
         bs = self.pool.block_size
         for seq in seqs:
@@ -520,7 +526,7 @@ class StageWorker:
         and attending over its own resident prefix plus itself.  Each
         sequence's K/V window scatters back into its own pages.  Requires
         `ensure_prefill_table` for every sequence first."""
-        self._check()
+        self._check("chunkset", n=len(seqs))
         kc, vc, pad_to = self._gather_batch(seqs)
         pos = jnp.asarray(np.asarray(pos0s, np.int32))
         ql = jnp.asarray(np.asarray(q_lens, np.int32))
@@ -647,7 +653,7 @@ class StageWorker:
         """Build `seq`'s prompt prefix from cached blocks: co-resident pool
         blocks are ref-shared; the rest are promoted out of the tier
         hierarchy.  Returns the number of tier-promoted blocks."""
-        self._check()
+        self._check("adopt_prefix", rid=seq)
         missing = [h for h in hashes if not self.pool.has_hash(h)]
         if len(missing) > self.pool.num_free():
             raise PoolExhausted(

@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import telemetry
+from repro.core import tracing
 from repro.core.dejavulib import faults
 from repro.core.dejavulib.buffers import HostMemoryStore, SSDStore
 from repro.core.dejavulib.streamer import StreamEngine
@@ -196,6 +197,9 @@ class KVTierManager:
         """Place `entry`'s bytes in tier 1 — or straight in tier 2 when no
         host room can be made; the actual copy is write-behind."""
         self._fault_point("tier.demote", entry.key)
+        if tracing.active():
+            tracing.event("tier.demote", key=entry.key,
+                          blocks=1, dst="host")
         if not self._make_host_room(entry):
             self._admit_ssd(entry, packed)
             return
@@ -225,6 +229,8 @@ class KVTierManager:
         """Demote one host-resident entry to tier 2 (write-behind)."""
         key = entry.key
         self._fault_point("tier.demote", f"spill-{key}")
+        if tracing.active():
+            tracing.event("tier.demote", key=key, blocks=1, dst="ssd")
         self._bump("spills")
         if entry.on_ssd:                    # disk already holds a copy
             entry.tier = TIER_SSD
@@ -291,6 +297,9 @@ class KVTierManager:
         Returns the transferred copy and refreshes LRU/tier state."""
         key = entry.key
         self._fault_point("tier.promote", key)
+        if tracing.active():
+            tracing.event("tier.promote", key=key,
+                          src="host" if entry.tier == TIER_HOST else "ssd")
         try:
             if entry.tier == TIER_HOST:
                 arr = self.hostlink.transfer(self.host.get(key), tag=key)
@@ -376,6 +385,11 @@ class KVTierManager:
         head latency lands on the critical path (modeled accounting)."""
         if not hashes:
             return {}
+        if tracing.active():
+            # chain identity: head hash + length pins WHICH cached prefix
+            # this request adopted
+            tracing.event("tier.adopt", chain=f"{hashes[0]:x}",
+                          blocks=len(hashes))
         self._sync()
         keys = [self.prefix_key(h) for h in hashes]
         self._pinned.update(keys)        # mid-chain evictions must skip us

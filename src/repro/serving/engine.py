@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import telemetry
+from repro.core import tracing
 from repro.core.cluster import DejaVuCluster
 from repro.core.dejavulib import faults
 from repro.core.dejavulib.transport import DEFAULT_HW, HardwareModel
@@ -151,16 +152,26 @@ class ServingEngine:
         if t is None:
             return
         now = t.clock_s
+        trc = tracing.active()
         for r in requests:
             if i == 0:
-                t.observe("engine.ttft_s", max(now - r.arrival, 0.0))
+                ttft = max(now - r.arrival, 0.0)
+                t.observe("engine.ttft_s", ttft)
+                if trc:
+                    tracing.event("emit.first_token", rid=r.rid,
+                                  ttft_ns=int(round(ttft * 1e9)))
             else:
                 prev = self._emit_clock.get(r.rid)
                 if prev is not None:
                     t.observe("engine.inter_token_s", max(now - prev, 0.0))
             self._emit_clock[r.rid] = now
         for mark in self.cluster.take_recovery_marks():
-            t.observe("cluster.recovery_s", max(now - mark, 0.0))
+            rec = max(now - mark, 0.0)
+            t.observe("cluster.recovery_s", rec)
+            if trc:
+                # failure -> first post-restore token, on the modeled clock
+                tracing.event("recovery.first_token",
+                              recovery_ns=int(round(rec * 1e9)))
 
     # ------------------------------------------------------------------
     # fault-injection plumbing (shared by both serving loops)
@@ -236,7 +247,7 @@ class ServingEngine:
                         slots[q] = queue.pop(0)
                 slot_rounds += depth
                 slot_busy += sum(s is not None for s in slots)
-                with telemetry.span("round"):
+                with telemetry.span("round"), tracing.span("round"):
                     for q in range(depth):
                         mb = slots[q]
                         if mb is None:
@@ -329,10 +340,14 @@ class ServingEngine:
                 cl.round_prefill_model_s = 0.0
                 self._round_decodes = 0
                 self._round_passes = 0
-                with telemetry.span("round"):
+                with telemetry.span("round"), tracing.span("round"):
                     plan = sched.plan_round(
                         lambda r: self._advance_seq(r, sched, report))
                     report.batch_trace.append(plan.n_active)
+                    if tracing.active():
+                        tracing.event("sched.plan", round=plan.round_idx,
+                                      n_active=plan.n_active,
+                                      rids=[r.rid for r in plan.work])
                     if fused:
                         self._execute_round_fused(plan, sched, report)
                     else:

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, Iterable, List, Optional
 
 from repro.core import telemetry
+from repro.core import tracing
 from repro.serving.request import Request
 
 
@@ -92,6 +93,7 @@ class RoundScheduler:
             r = self.preempted.popleft()
             cl.resume_seq(r.rid)
             telemetry.count("engine.resumed")
+            tracing.event("sched.resume", rid=r.rid)
             self._activate(r)
         while self.queue and len(self.active) < self.max_active and \
                 cl.can_admit(self.queue[0].prompt_len, len(self.active),
@@ -99,9 +101,13 @@ class RoundScheduler:
                                         else None)):
             r = self.queue.popleft()
             # queue wait: request arrival -> admission, on the modeled clock
-            telemetry.observe("engine.queue_wait_s",
-                              max(telemetry.clock() - r.arrival, 0.0))
+            wait_s = max(telemetry.clock() - r.arrival, 0.0)
+            telemetry.observe("engine.queue_wait_s", wait_s)
             telemetry.count("engine.admitted")
+            if tracing.active():
+                tracing.event("sched.admit", rid=r.rid,
+                              wait_ns=int(round(wait_s * 1e9)),
+                              prompt_len=r.prompt_len)
             first_step(r)
             self._activate(r)
         if not self.active:
@@ -131,6 +137,7 @@ class RoundScheduler:
         self._active_ids.discard(victim.rid)
         self.preempted.append(victim)
         telemetry.count("engine.preemptions")
+        tracing.event("sched.preempt", rid=victim.rid)
 
     def retire(self) -> List[Request]:
         """End of round: finished sequences return their blocks immediately
@@ -142,6 +149,8 @@ class RoundScheduler:
             for r in done:
                 r.done = True
                 self.cl.free_seq(r.rid)
+                tracing.event("sched.retire", rid=r.rid,
+                              tokens=len(r.tokens))
                 gone.add(r.rid)
             self.active = [a for a in self.active if a.rid not in gone]
             self._active_ids -= gone

@@ -119,6 +119,29 @@ def test_bad_schema_and_missing_dir_are_usage_errors(tmp_path):
     assert cbt.main([str(tmp_path / "nope"), "--baseline", base]) == 2
 
 
+def test_flush_json_double_flush_raises(tmp_path, monkeypatch):
+    """A second flush of the same stem would silently overwrite the CI
+    trend artifact with post-flush leftovers; it must error instead."""
+    monkeypatch.delenv("BENCH_JSON_DIR", raising=False)
+    common_path = os.path.join(os.path.dirname(__file__), "..",
+                               "benchmarks", "common.py")
+    spec = importlib.util.spec_from_file_location("bench_common", common_path)
+    common = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(common)
+
+    monkeypatch.setenv("BENCH_JSON_DIR", str(tmp_path))
+    common.emit_metric("m", 1.0)
+    common.flush_json("mod")
+    assert os.path.exists(tmp_path / "mod.json")
+    # empty-rows re-flush (the atexit path after a manual flush) stays a
+    # silent no-op ...
+    common.flush_json("mod")
+    # ... but a second flush with NEW rows is a hard error
+    common.emit_metric("m2", 2.0)
+    with pytest.raises(RuntimeError, match="already written"):
+        common.flush_json("mod")
+
+
 def test_committed_baseline_is_loadable():
     """The repo's committed baseline must parse under the current schema."""
     doc = cbt.load_baseline(cbt.DEFAULT_BASELINE)

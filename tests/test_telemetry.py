@@ -83,6 +83,30 @@ def test_module_helpers_noop_when_uninstalled():
         pass
 
 
+def test_advance_and_span_raise_off_owner_thread():
+    """The modeled clock is single-writer: mutating it from the streamer
+    thread would make timestamps racy, so the registry refuses."""
+    import threading
+    t = telemetry.Telemetry()
+    errs = []
+
+    def worker():
+        for fn in (lambda: t.advance(1.0), lambda: t.span("x").__enter__()):
+            try:
+                fn()
+            except RuntimeError as e:
+                errs.append(e)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    assert len(errs) == 2
+    assert all("non-owner thread" in str(e) for e in errs)
+    # counters/histograms stay thread-safe: no guard on those
+    t.count("from_main")
+    assert t.snapshot()["counters"]["from_main"] == 1
+
+
 def test_install_uninstall_restores_previous():
     a = telemetry.Telemetry()
     prev = telemetry.install(a)

@@ -1,0 +1,289 @@
+"""Flight recorder (repro.core.tracing): ring-buffer semantics, causal
+span nesting, cross-thread routing, byte-identical dumps across identical
+serving runs, the three wire-format exporters, and the trace_report
+critical-path gate."""
+import dataclasses
+import importlib.util
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import exporters, telemetry, tracing
+from repro.core.dejavulib import faults
+
+_TOOL = os.path.join(os.path.dirname(__file__), "..", "tools",
+                     "trace_report.py")
+_spec = importlib.util.spec_from_file_location("trace_report", _TOOL)
+trace_report = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(trace_report)
+
+
+# ---------------------------------------------------------------------------
+# unit level: ring buffer, spans, thread routing
+# ---------------------------------------------------------------------------
+
+def test_ring_overwrites_oldest_and_counts_drops():
+    t = tracing.Tracer(capacity=4)
+    for i in range(10):
+        t.event("e", n=i)
+    tr = t.snapshot()["tracks"][tracing.SERVE_TRACK]
+    assert tr["emitted"] == 10
+    assert tr["dropped"] == 6                  # visible, never silent
+    assert [e["eid"] for e in tr["events"]] == [6, 7, 8, 9]
+    assert [e["args"]["n"] for e in tr["events"]] == [6, 7, 8, 9]
+
+
+def test_span_nesting_parents_and_modeled_clock():
+    prev = telemetry.install(telemetry.Telemetry())
+    tele = telemetry.current()
+    t = tracing.Tracer()
+    try:
+        with t.span("round"):
+            tele.advance(1e-6)
+            with t.span("pass", rid=7, kind="fused_decode"):
+                tele.advance(2e-6)
+                t.event("emit.first_token", rid=7)
+    finally:
+        telemetry.uninstall(prev)
+    evs = t.snapshot()["tracks"][tracing.SERVE_TRACK]["events"]
+    # spans record at CLOSE (innermost first); eids are reserved at open
+    assert [e["name"] for e in evs] == ["emit.first_token", "pass", "round"]
+    emit = evs[0]
+    pas = evs[1]
+    rnd = evs[2]
+    assert rnd["eid"] == 0 and "parent" not in rnd
+    assert pas["parent"] == rnd["eid"]
+    assert emit["parent"] == pas["eid"]
+    # integer-ns timestamps on the modeled clock
+    assert (rnd["ts"], rnd["dur"]) == (0, 3000)
+    assert (pas["ts"], pas["dur"]) == (1000, 2000)
+    assert emit["ts"] == 3000 and emit["ph"] == "I"
+    assert pas["rid"] == 7 and pas["args"] == {"kind": "fused_decode"}
+
+
+def test_nonowner_thread_routes_to_streamer_cursor():
+    t = tracing.Tracer()
+
+    def worker():
+        t.event("xfer", dur_ns=100, bytes=5)
+        t.event("stream.task", dur_ns=50)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    evs = t.snapshot()["tracks"][tracing.STREAM_TRACK]["events"]
+    # never reads the modeled clock: FIFO cursor chaining instead
+    assert [e["ts"] for e in evs] == [0, 100]
+    assert evs[0]["dur"] == 100 and evs[0]["ph"] == "X"
+    assert all("parent" not in e for e in evs)
+
+
+def test_span_raises_off_owner_thread():
+    t = tracing.Tracer()
+    errs = []
+
+    def worker():
+        try:
+            with t.span("x"):
+                pass
+        except RuntimeError as e:
+            errs.append(e)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    assert len(errs) == 1 and "owner" in str(errs[0])
+
+
+def test_module_helpers_noop_when_uninstalled():
+    assert tracing.current() is None
+    assert not tracing.active()
+    tracing.event("x", rid=1)                  # silent no-ops
+    with tracing.span("y"):
+        pass
+    assert tracing.current() is None
+
+
+def test_install_uninstall_restores_previous():
+    a = tracing.Tracer()
+    prev = tracing.install(a)
+    assert prev is None
+    b = tracing.Tracer()
+    prev = tracing.install(b)
+    assert prev is a
+    tracing.uninstall(prev)
+    assert tracing.current() is a
+    tracing.uninstall()
+    assert tracing.current() is None
+
+
+# ---------------------------------------------------------------------------
+# engine level: a traced faulted run through the real serving stack
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    import jax
+    from repro.configs.registry import PAPER_ARCHS
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(PAPER_ARCHS["gpt2-1.5b"].reduced(),
+                              dtype="float32", num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    return cfg, model, params, prompts
+
+
+def _traced_run(served):
+    """Tiered + replicated continuous run with one worker death at step 5
+    and one injected streamer delay — exercises every trace source."""
+    from repro.serving import Request, ServingEngine
+    cfg, model, params, prompts = served
+    prev_tele = telemetry.install(telemetry.Telemetry())
+    tracer = tracing.Tracer()
+    prev_tr = tracing.install(tracer)
+    try:
+        eng = ServingEngine(cfg, model, params, 2, paged=True, tiered=True,
+                            kv_pool_blocks=128, host_cache_blocks=16,
+                            ssd_cache_blocks=32, replication=True)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=4)
+                for i, p in enumerate(prompts)]
+        plan = faults.FaultPlan([faults.FaultSpec(
+            "stream.task", nth=2, kind="delay", delay_s=1e-3)])
+        rep = eng.run_continuous(reqs, max_active=2, fail_at={5: 1},
+                                 fault_plan=plan)
+        snapshot = telemetry.current().snapshot()
+    finally:
+        tracing.uninstall(prev_tr)
+        telemetry.uninstall(prev_tele)
+    assert rep.recoveries == 1
+    return rep, tracer, snapshot
+
+
+@pytest.fixture(scope="module")
+def traced(served):
+    rep, tracer, tele_snap = _traced_run(served)
+    return rep, tracer.snapshot(), tracer.to_json(), tele_snap
+
+
+def test_traced_run_covers_all_sources(traced):
+    _, trace, _, _ = traced
+    serve_names = {e["name"] for e in trace["tracks"]["serve"]["events"]}
+    assert {"round", "pass", "sched.admit", "sched.plan", "sched.retire",
+            "emit.first_token", "cluster.kill", "recovery"} <= serve_names
+    stream_names = {e["name"]
+                    for e in trace["tracks"]["streamer"]["events"]}
+    assert {"xfer", "stream.task", "fault.delay"} <= stream_names
+    # per-worker stage tracks exist alongside serve/streamer
+    assert any(t.startswith("w") for t in trace["tracks"])
+    assert all(t["dropped"] == 0 for t in trace["tracks"].values())
+
+
+def test_determinism_byte_identical_dumps(served, traced):
+    """Two identical runs must produce byte-identical trace dumps — the
+    recorder's headline guarantee (same as telemetry's)."""
+    _, _, dump_a, _ = traced
+    _, tracer_b, _ = _traced_run(served)
+    assert dump_a == tracer_b.to_json()
+
+
+def test_trace_report_attributes_wall_time(traced, tmp_path):
+    _, trace, dump, _ = traced
+    report = trace_report.analyze(trace)
+    assert len(report["requests"]) == 3
+    for r in report["requests"].values():
+        assert r["coverage"] >= 0.95            # acceptance criterion (c)
+    assert report["bubbles"]["wall_total_ns"] > 0
+    assert not report["dropped"]
+    # the CLI gate CI runs over the failures-benchmark artifact
+    p = tmp_path / "trace.json"
+    p.write_text(dump)
+    assert trace_report.main([str(p), "--assert"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_perfetto_export_tracks_and_instants(traced):
+    _, trace, _, _ = traced
+    doc = exporters.trace_to_perfetto(trace)
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert len(meta) == len(trace["tracks"])    # one named thread per track
+    names = {m["tid"]: m["args"]["name"] for m in meta}
+    assert names[1] == "serve"                  # serve first, streamer last
+    assert names[max(names)] == "streamer"
+    assert any(e["ph"] == "X" and e.get("dur", 0) > 0 for e in evs)
+    insts = [e for e in evs if e["ph"] == "i"]
+    assert any(e["name"].startswith("fault.") for e in insts)
+    assert all(e["s"] == "t" for e in insts)
+    json.dumps(doc)                             # serialisable as-is
+
+
+def test_prometheus_export_text_format(traced):
+    _, _, _, tele_snap = traced
+    text = exporters.telemetry_to_prometheus(tele_snap)
+    assert text.endswith("\n")
+    lines = text.splitlines()
+    assert any(line.startswith("# TYPE engine_ttft_s histogram")
+               for line in lines)
+    assert any('engine_ttft_s_bucket{le="+Inf"}' in line for line in lines)
+    assert any(line.startswith("faults_fired_total{") for line in lines)
+    assert any(line.startswith("modeled_clock_seconds ") for line in lines)
+    # cumulative buckets: counts never decrease within a histogram family
+    buckets = [int(line.rsplit(" ", 1)[1]) for line in lines
+               if line.startswith("engine_ttft_s_bucket{")]
+    assert buckets == sorted(buckets)
+
+
+def test_otlp_export_parents_resolve(traced):
+    _, trace, _, _ = traced
+    doc = exporters.trace_to_otlp(trace)
+    spans = doc["resourceSpans"][0]["scopeSpans"][0]["spans"]
+    assert len(spans) == sum(len(t["events"])
+                             for t in trace["tracks"].values())
+    serve_ids = {s["spanId"] for s in spans
+                 if any(a["key"] == "track"
+                        and a["value"]["stringValue"] == "serve"
+                        for a in s["attributes"])}
+    parents = {s["parentSpanId"] for s in spans if "parentSpanId" in s}
+    assert parents and parents <= serve_ids     # causal links resolve
+    assert all(len(s["traceId"]) == 32 and len(s["spanId"]) == 16
+               for s in spans)
+    json.dumps(doc)
+
+
+# ---------------------------------------------------------------------------
+# golden schemas: exported key sets and version strings are API
+# ---------------------------------------------------------------------------
+
+def test_golden_schema_key_sets(traced):
+    """Renderers (render_tables / render_compare / exporters / CI trend
+    gate) all consume these exact key sets; a rename is a breaking change
+    that must show up here, not in a downstream tool."""
+    _, trace, _, tele_snap = traced
+    assert tele_snap["schema"] == "repro.telemetry/v1"
+    assert sorted(tele_snap) == ["clock_s", "counters", "gauges",
+                                 "histograms", "schema", "spans"]
+    for h in tele_snap["histograms"].values():
+        assert sorted(h) == ["buckets_s", "count", "counts", "max_s",
+                             "min_s", "p50_s", "p90_s", "p99_s", "sum_s"]
+    for s in tele_snap["spans"].values():
+        assert sorted(s) == ["count", "max_s", "total_s"]
+
+    assert trace["schema"] == "repro.trace/v1"
+    assert sorted(trace) == ["capacity", "schema", "tracks"]
+    required = {"eid", "name", "ph", "ts"}
+    allowed = required | {"dur", "parent", "rid", "seq", "args"}
+    for tr in trace["tracks"].values():
+        assert sorted(tr) == ["dropped", "emitted", "events"]
+        for ev in tr["events"]:
+            keys = set(ev)
+            assert required <= keys <= allowed, f"unexpected keys in {ev}"
+            assert ev["ph"] in ("X", "I")

@@ -3,10 +3,12 @@
 
 Scans README.md, docs/*.md, and benchmarks/README.md for markdown links
 ``[text](target)`` and checks that every non-URL target exists relative to
-the file that references it (anchors are stripped; bare #anchors and
-http(s)/mailto links are skipped).  Exits non-zero listing every dangling
+the file that references it.  Anchors are validated too: a ``#fragment``
+(bare or on a ``file.md#fragment`` link into another scanned markdown
+file) must match a heading's GitHub-style slug in the target document.
+http(s)/mailto links are skipped.  Exits non-zero listing every dangling
 link.  CI runs this next to ``python -m compileall src`` so a renamed
-module or document fails fast.
+module, document, or section heading fails fast.
 """
 from __future__ import annotations
 
@@ -16,7 +18,8 @@ import re
 import sys
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
 
 
 def doc_files(root: str):
@@ -26,21 +29,49 @@ def doc_files(root: str):
     return [f for f in files if os.path.exists(f)]
 
 
-def check_file(path: str):
-    bad = []
-    text = open(path, encoding="utf-8").read()
+def _strip_code(text: str) -> str:
     # fenced code blocks routinely contain pseudo-links (e.g. arrays) — skip
-    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code ticks, lowercase,
+    drop everything but word chars/spaces/hyphens, spaces -> hyphens."""
+    h = re.sub(r"[*_`]", "", heading)
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)    # [text](url) -> text
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: str, cache: dict) -> set:
+    if path not in cache:
+        try:
+            text = _strip_code(open(path, encoding="utf-8").read())
+        except OSError:
+            cache[path] = set()
+        else:
+            cache[path] = {github_slug(m.group(2))
+                           for m in HEADING_RE.finditer(text)}
+    return cache[path]
+
+
+def check_file(path: str, anchor_cache: dict):
+    bad = []
+    text = _strip_code(open(path, encoding="utf-8").read())
     for m in LINK_RE.finditer(text):
         target = m.group(1)
         if target.startswith(SKIP_PREFIXES):
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:
+        rel, _, frag = target.partition("#")
+        resolved = path if not rel else os.path.normpath(
+            os.path.join(os.path.dirname(path), rel))
+        if rel and not os.path.exists(resolved):
+            bad.append((target, f"missing '{resolved}'"))
             continue
-        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
-        if not os.path.exists(resolved):
-            bad.append((target, resolved))
+        if frag and resolved.endswith(".md"):
+            if frag not in anchors_of(resolved, anchor_cache):
+                bad.append((target, f"no heading '#{frag}' in '{resolved}'"))
     return bad
 
 
@@ -48,16 +79,18 @@ def main() -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     failures = []
     files = doc_files(root)
+    anchor_cache: dict = {}
     for f in files:
-        for target, resolved in check_file(f):
+        for target, why in check_file(f, anchor_cache):
+            why = why.replace(root + os.sep, "")
             failures.append(f"{os.path.relpath(f, root)}: link '{target}' "
-                            f"-> missing '{os.path.relpath(resolved, root)}'")
+                            f"-> {why}")
     if failures:
         print("dangling documentation links:", file=sys.stderr)
         for line in failures:
             print(f"  {line}", file=sys.stderr)
         return 1
-    print(f"docs check: {len(files)} files, all links resolve")
+    print(f"docs check: {len(files)} files, all links and anchors resolve")
     return 0
 
 

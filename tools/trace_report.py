@@ -1,0 +1,238 @@
+#!/usr/bin/env python
+"""Replay a flight-recorder dump (``repro.trace/v1``) into a per-request
+critical-path breakdown and a bubble-attribution table.
+
+The modeled clock only advances inside ``pass`` spans (every
+``telemetry.advance`` in the serving stack is charged inside one), so a
+request's admit→retire window decomposes exactly into the pass spans that
+overlap it.  Per request, each overlapping serve-track span is attributed
+to one phase:
+
+- ``queue``     — arrival → admission (the ``sched.admit`` ``wait_ns``)
+- ``prefill``   — pass spans of a prefill kind that include the request
+- ``decode``    — pass spans of a decode kind that include the request
+- ``stall_prompt`` — prefill-kind passes of OTHER requests inside the
+  window: the prompt-induced pipeline bubble of the paper's Fig. 4
+- ``stall_decode`` — decode-kind passes of other requests (batch slots
+  the request couldn't join)
+- ``recovery``  — ``recovery`` spans (worker rebuild after a failure)
+- ``residual``  — window time no span claims (explicitly reported)
+
+Streamed transfers (``xfer`` events) never advance the modeled clock —
+they model DMA/network time overlapped with compute — so they are
+reported per-kind as an informational overlay, not part of the wall-time
+denominator.
+
+``--assert`` exits non-zero unless every request's named-phase coverage
+is ≥ ``--min-coverage`` (CI gate); with ``--compare BASELINE`` it also
+asserts this trace's prompt-induced bubble share is no worse than the
+baseline's (the disagg-vs-coupled claim).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+TRACE_SCHEMA = "repro.trace/v1"
+
+PREFILL_KINDS = ("mb_prefill", "prefill_batch", "prefill_chunk",
+                 "prefill_token", "chunkset")
+DECODE_KINDS = ("mb_decode", "perseq_decode", "fused_decode")
+
+PHASES = ("queue", "prefill", "decode", "stall_prompt", "stall_decode",
+          "recovery", "residual")
+
+
+def _involves(ev: dict, rid: int) -> bool:
+    if ev.get("rid") == rid:
+        return True
+    rids = ev.get("args", {}).get("rids")
+    return rids is not None and rid in rids
+
+
+def _phase_of(ev: dict, rid: int) -> Optional[str]:
+    if ev["name"] == "recovery":
+        return "recovery"
+    if ev["name"] != "pass":
+        return None
+    kind = ev.get("args", {}).get("kind", "")
+    mine = _involves(ev, rid)
+    if kind in PREFILL_KINDS or kind.startswith("prefill"):
+        return "prefill" if mine else "stall_prompt"
+    if kind in DECODE_KINDS or "decode" in kind:
+        return "decode" if mine else "stall_decode"
+    return None
+
+
+def analyze(trace: Dict[str, object]) -> Dict[str, object]:
+    """Pure analysis: trace dump -> {requests, bubbles, streams, dropped}."""
+    if trace.get("schema") != TRACE_SCHEMA:
+        raise ValueError(f"expected a {TRACE_SCHEMA} dump, "
+                         f"got {trace.get('schema')!r}")
+    tracks = trace.get("tracks", {})
+    serve = tracks.get("serve", {"events": [], "dropped": 0})
+    events = serve["events"]
+
+    # request lifecycle boundaries from scheduler events
+    admits: Dict[int, dict] = {}
+    ends: Dict[int, int] = {}
+    for ev in events:
+        rid = ev.get("rid")
+        if rid is None:
+            continue
+        if ev["name"] == "sched.admit":
+            admits.setdefault(rid, ev)
+        end = ev["ts"] + ev.get("dur", 0)
+        ends[rid] = max(ends.get(rid, end), end)
+    # passes that include a request can outlast its last own event
+    spans = [ev for ev in events if ev["name"] in ("pass", "recovery")]
+    for ev in spans:
+        for rid in list(ends):
+            if _involves(ev, rid):
+                ends[rid] = max(ends[rid], ev["ts"] + ev.get("dur", 0))
+
+    requests = {}
+    for rid, admit in sorted(admits.items()):
+        t0, t1 = admit["ts"], ends.get(rid, admit["ts"])
+        wait = int(admit.get("args", {}).get("wait_ns", 0))
+        phases = {p: 0 for p in PHASES}
+        phases["queue"] = wait
+        for ev in spans:
+            lo = max(ev["ts"], t0)
+            hi = min(ev["ts"] + ev.get("dur", 0), t1)
+            if hi <= lo:
+                continue
+            ph = _phase_of(ev, rid)
+            if ph is not None:
+                phases[ph] += hi - lo
+        window = t1 - t0
+        named = sum(phases[p] for p in PHASES if p != "residual")
+        phases["residual"] = max(window + wait - named, 0)
+        wall = window + wait
+        requests[rid] = {
+            "admit_ns": t0,
+            "end_ns": t1,
+            "wall_ns": wall,
+            "phases": phases,
+            "coverage": (named / wall) if wall > 0 else 1.0,
+        }
+
+    # Fig. 4 bubble taxonomy, aggregated over requests
+    tot = {p: sum(r["phases"][p] for r in requests.values()) for p in PHASES}
+    wall_total = sum(r["wall_ns"] for r in requests.values())
+    bubbles = {
+        "prompt_induced_ns": tot["stall_prompt"],
+        "decode_stall_ns": tot["stall_decode"],
+        "recovery_ns": tot["recovery"],
+        "queue_ns": tot["queue"],
+        "wall_total_ns": wall_total,
+        "prompt_bubble_share": (tot["stall_prompt"] / wall_total
+                                if wall_total else 0.0),
+    }
+
+    # informational: streamed/transferred modeled time per track (never in
+    # the wall-time denominator — it models overlapped DMA/network time)
+    streams = {}
+    for tname, tr in tracks.items():
+        xfer_ns = sum(ev.get("dur", 0) for ev in tr["events"]
+                      if ev["name"] in ("xfer", "stream.task"))
+        if xfer_ns:
+            streams[tname] = xfer_ns
+
+    return {
+        "requests": requests,
+        "bubbles": bubbles,
+        "streams_ns": streams,
+        "dropped": {t: tr["dropped"] for t, tr in tracks.items()
+                    if tr["dropped"]},
+    }
+
+
+def _ms(ns: int) -> str:
+    return f"{ns / 1e6:10.3f}"
+
+
+def render(report: Dict[str, object]) -> str:
+    lines: List[str] = []
+    lines.append("per-request critical path (ms on the modeled clock)")
+    hdr = f"{'rid':>4} {'wall':>10} " + " ".join(f"{p:>12}" for p in PHASES) \
+        + f" {'coverage':>9}"
+    lines.append(hdr)
+    for rid, r in report["requests"].items():
+        row = f"{rid:>4} {_ms(r['wall_ns'])} " + " ".join(
+            f"{_ms(r['phases'][p]):>12}" for p in PHASES)
+        lines.append(row + f" {r['coverage'] * 100:8.2f}%")
+    b = report["bubbles"]
+    lines.append("")
+    lines.append("bubble attribution (paper Fig. 4 taxonomy)")
+    for key in ("prompt_induced_ns", "decode_stall_ns", "recovery_ns",
+                "queue_ns"):
+        share = b[key] / b["wall_total_ns"] if b["wall_total_ns"] else 0.0
+        lines.append(f"  {key[:-3]:<16} {_ms(b[key])} ms  "
+                     f"({share * 100:5.2f}% of request wall time)")
+    lines.append(f"  prompt_bubble_share = {b['prompt_bubble_share']:.4f}")
+    if report["streams_ns"]:
+        lines.append("")
+        lines.append("overlapped streaming (informational, not wall time)")
+        for t, ns in sorted(report["streams_ns"].items()):
+            lines.append(f"  {t:<10} {_ms(ns)} ms")
+    if report["dropped"]:
+        lines.append("")
+        lines.append(f"WARNING: ring-buffer drops: {report['dropped']} "
+                     "(dump is truncated; raise Tracer(capacity=...))")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="repro.trace/v1 JSON dump")
+    ap.add_argument("--compare", metavar="BASELINE",
+                    help="baseline trace: assert prompt-bubble share is "
+                         "no worse than it (with --assert)")
+    ap.add_argument("--assert", dest="do_assert", action="store_true",
+                    help="exit non-zero on coverage/bubble violations")
+    ap.add_argument("--min-coverage", type=float, default=0.95,
+                    help="per-request named-phase coverage floor "
+                         "(default 0.95)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the analysis as JSON instead of tables")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        report = analyze(json.load(f))
+    if args.json:
+        print(json.dumps(report, sort_keys=True, indent=1))
+    else:
+        print(render(report))
+
+    failures: List[str] = []
+    if args.do_assert:
+        if not report["requests"]:
+            failures.append("trace contains no admitted requests")
+        for rid, r in report["requests"].items():
+            if r["coverage"] < args.min_coverage:
+                failures.append(
+                    f"request {rid}: coverage {r['coverage']:.4f} < "
+                    f"{args.min_coverage} "
+                    f"(residual {r['phases']['residual']} ns)")
+        if args.compare:
+            with open(args.compare) as f:
+                base = analyze(json.load(f))
+            mine = report["bubbles"]["prompt_bubble_share"]
+            theirs = base["bubbles"]["prompt_bubble_share"]
+            if mine > theirs + 1e-9:
+                failures.append(
+                    f"prompt bubble share regressed: {mine:.4f} > "
+                    f"baseline {theirs:.4f}")
+    if failures:
+        print("\nTRACE GATE FAILURES:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
